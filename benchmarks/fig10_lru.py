@@ -1,0 +1,34 @@
+"""Fig 10: two-level LRU memory policy vs no-policy, latency across S —
+including the capacity-thrash latency jump at small S (paper: near S=4)."""
+from __future__ import annotations
+
+from benchmarks.common import Csv, forest_for, sim_spec, traces_for
+from repro.core.coordinator import ablation
+from repro.simulator.events import simulate
+from repro.simulator.hardware import PLATFORMS
+
+
+def run(csv: Csv, arch: str = "deepseek-v2-lite",
+        platform: str = "a6000") -> dict:
+    trace, _ = traces_for(arch)
+    forest = forest_for(arch)
+    hw = PLATFORMS[platform]
+    # tight memory: capacity below the prefetch working set at small S
+    spec = sim_spec(trace, capacity_frac=0.35)
+    out = {}
+    for s in range(1, 9):
+        two = ablation(f"lru2_s{s}", adaptive_s=False, fixed_s=s)
+        one = ablation(f"lru1_s{s}", adaptive_s=False, fixed_s=s,
+                       two_level_lru=False, protect_early_layers=False)
+        r2 = simulate(trace, spec, hw, two, forest=forest)
+        r1 = simulate(trace, spec, hw, one, forest=forest)
+        out[s] = (r2.total_s, r1.total_s)
+        csv.add(f"fig10/{arch}/S={s}/two_level", r2.total_s * 1e6,
+                f"miss_ms={r2.total_cache_miss_s*1e3:.3f}")
+        csv.add(f"fig10/{arch}/S={s}/single", r1.total_s * 1e6,
+                f"miss_ms={r1.total_cache_miss_s*1e3:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    run(Csv())

@@ -1,0 +1,39 @@
+"""Fig 11 + Table 5: end-to-end latency with vs without cache-aware routing
+(paper: -96.65% DeepSeek/Qwen1.5; -55.58% Qwen2 thanks to shared experts)."""
+from __future__ import annotations
+
+from benchmarks.common import (Csv, PAPER_MODELS, PAPER_PLATFORMS,
+                               forest_for, sim_spec, traces_for)
+from repro.core import expertflow
+from repro.core.coordinator import ablation
+from repro.simulator.events import simulate
+from repro.simulator.hardware import PLATFORMS
+
+
+def run(csv: Csv) -> dict:
+    out = {}
+    for arch in PAPER_MODELS:
+        trace, _ = traces_for(arch)
+        forest = forest_for(arch)
+        emb = 17.3 / (4 if arch == "qwen2-moe-57b" else 1)
+        for platform in PAPER_PLATFORMS:
+            if arch == "qwen2-moe-57b" and platform == "ascend910b":
+                continue
+            hw = PLATFORMS[platform]
+            spec = sim_spec(trace, capacity_frac=0.7, expert_mb=emb)
+            on = simulate(trace, spec, hw, expertflow(), forest=forest)
+            off = simulate(trace, spec, hw,
+                           ablation("no_car", cache_aware=False),
+                           forest=forest)
+            red = 1 - on.total_stall_s / max(off.total_stall_s, 1e-12)
+            out[(arch, platform)] = red
+            csv.add(f"fig11/{arch}/{platform}/routing_off",
+                    off.total_stall_s * 1e6, "")
+            csv.add(f"fig11/{arch}/{platform}/routing_on",
+                    on.total_stall_s * 1e6,
+                    f"stall_reduction={red*100:.1f}%")
+    return out
+
+
+if __name__ == "__main__":
+    run(Csv())

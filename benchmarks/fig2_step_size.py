@@ -1,0 +1,36 @@
+"""Fig 2: latency vs fixed step size S (U-shape) + adaptive S result."""
+from __future__ import annotations
+
+from benchmarks.common import Csv, forest_for, sim_spec, traces_for
+from repro.core import expertflow
+from repro.core.coordinator import ablation
+from repro.simulator.events import simulate
+from repro.simulator.hardware import PLATFORMS
+
+
+def run(csv: Csv, arch: str = "deepseek-v2-lite",
+        platform: str = "a6000") -> dict:
+    trace, _ = traces_for(arch)
+    forest = forest_for(arch)
+    hw = PLATFORMS[platform]
+    spec = sim_spec(trace, capacity_frac=0.6)
+    out = {}
+    for s in range(1, 9):
+        pol = ablation(f"fixed_s{s}", adaptive_s=False, fixed_s=s)
+        rep = simulate(trace, spec, hw, pol, forest=forest)
+        total = rep.total_s
+        out[s] = total
+        csv.add(f"fig2/{arch}/{platform}/S={s}", total * 1e6,
+                f"stall_ms={rep.total_stall_s*1e3:.3f}")
+    rep = simulate(trace, spec, hw, expertflow(), forest=forest)
+    out["adaptive"] = rep.total_s
+    best_fixed = min(v for k, v in out.items() if k != "adaptive")
+    csv.add(f"fig2/{arch}/{platform}/adaptive", rep.total_s * 1e6,
+            f"stall_ms={rep.total_stall_s*1e3:.3f};"
+            f"vs_best_fixed={rep.total_s/best_fixed:.3f};"
+            f"mean_S={rep.summary()['mean_step_size']:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run(Csv())

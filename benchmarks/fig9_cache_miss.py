@@ -1,0 +1,36 @@
+"""Fig 9 + Tables 3/4: cache-miss latency with the trained predictor,
+per model x platform (baseline table 3 vs predictor table 4)."""
+from __future__ import annotations
+
+from benchmarks.common import (Csv, PAPER_MODELS, PAPER_PLATFORMS,
+                               forest_for, sim_spec, traces_for)
+from repro.core import baseline, expertflow
+from repro.simulator.events import simulate
+from repro.simulator.hardware import PLATFORMS
+
+
+def run(csv: Csv) -> dict:
+    out = {}
+    for arch in PAPER_MODELS:
+        trace, _ = traces_for(arch)
+        forest = forest_for(arch)
+        emb = 17.3 / (4 if arch == "qwen2-moe-57b" else 1)
+        for platform in PAPER_PLATFORMS:
+            if arch == "qwen2-moe-57b" and platform == "ascend910b":
+                continue
+            hw = PLATFORMS[platform]
+            spec = sim_spec(trace, capacity_frac=0.7, expert_mb=emb)
+            rb = simulate(trace, spec, hw, baseline())
+            re = simulate(trace, spec, hw, expertflow(), forest=forest)
+            out[(arch, platform)] = (rb.total_cache_miss_s,
+                                     re.total_cache_miss_s)
+            csv.add(f"table3/{arch}/{platform}/baseline_miss",
+                    rb.total_cache_miss_s * 1e6, "")
+            csv.add(f"table4/{arch}/{platform}/predictor_miss",
+                    re.total_cache_miss_s * 1e6,
+                    f"reduction={(1 - re.total_cache_miss_s / max(rb.total_cache_miss_s, 1e-12)) * 100:.1f}%")
+    return out
+
+
+if __name__ == "__main__":
+    run(Csv())

@@ -1,0 +1,44 @@
+"""Roofline table from the dry-run reports (reports/dryrun/*.json)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import Csv
+
+REPORT_DIR = pathlib.Path(__file__).resolve().parents[1] / "reports" / "dryrun"
+
+
+def run(csv: Csv) -> dict:
+    out = {}
+    if not REPORT_DIR.exists():
+        csv.add("roofline/missing", 0.0, "run repro.launch.dryrun first")
+        return out
+    for p in sorted(REPORT_DIR.glob("*__16x16.json")):
+        rec = json.loads(p.read_text())
+        tag = f"{rec['arch']}/{rec['shape']}"
+        if rec["status"] == "skip":
+            csv.add(f"roofline/{tag}", 0.0, f"SKIP:{rec['reason'][:40]}")
+            continue
+        if rec["status"] != "ok" or "roofline" not in rec:
+            csv.add(f"roofline/{tag}", 0.0, f"status={rec['status']}")
+            continue
+        r = rec["roofline"]
+        out[tag] = r
+        csv.add(
+            f"roofline/{tag}",
+            max(r["compute_term_s"], r.get("memory_term_min_s", 0),
+                r["collective_term_s"]) * 1e6,
+            f"compute_s={r['compute_term_s']:.4g};"
+            f"mem_min_s={r.get('memory_term_min_s', 0):.4g};"
+            f"mem_upper_s={r['memory_term_s']:.4g};"
+            f"collective_s={r['collective_term_s']:.4g};"
+            f"dominant={r['dominant']};"
+            f"useful_ratio={r['useful_flops_ratio']:.3f};"
+            f"roofline_frac={r['roofline_fraction']:.3f};"
+            f"peak_GiB={rec['peak_memory_bytes']/2**30:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run(Csv())

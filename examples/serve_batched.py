@@ -1,0 +1,14 @@
+"""End-to-end serving driver: continuous batching over a ShareGPT-like
+workload with ExpertFlow policy comparison (the paper's deployment shape).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+
+sys.argv = [sys.argv[0], "--arch", "qwen1.5-moe-a2.7b", "--requests", "8",
+            "--batch", "4", "--max-new", "8", "--platform", "a6000"]
+
+from repro.launch.serve import main  # noqa: E402
+
+if __name__ == "__main__":
+    main()

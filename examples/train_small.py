@@ -1,0 +1,15 @@
+"""Train a small MoE LM end to end (data pipeline -> FSDP-ready train step ->
+async checkpointing -> restart), CPU-sized.
+
+    PYTHONPATH=src python examples/train_small.py
+"""
+import sys
+
+sys.argv = [sys.argv[0], "--arch", "olmoe-1b-7b", "--smoke", "--steps", "60",
+            "--batch", "4", "--seq", "32", "--lr", "2e-3", "--ckpt-every", "20",
+            "--ckpt-dir", "/tmp/repro_quickstart_ckpt"]
+
+from repro.launch.train import main  # noqa: E402
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Dev harness: forward + prefill + decode every smoke config."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCH_IDS, get_smoke_config
+from repro.models import Model
+
+B, T = 2, 16
+
+
+def run(arch: str) -> None:
+    cfg = get_smoke_config(arch)
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    tokens = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        frames = jax.random.normal(key, (B, 24, cfg.d_model), jnp.bfloat16)
+        enc_out = model.encode(params, frames)
+    if cfg.uses_input_embeds:
+        embeds = jax.random.normal(key, (B, T, cfg.d_model), jnp.bfloat16) * 0.02
+        h = model.forward(params, embeds=embeds, enc_out=enc_out)
+        logits_p, cache = model.prefill(params, embeds=embeds, max_seq=T + 8,
+                                        enc_out=enc_out)
+    else:
+        h = model.forward(params, tokens, enc_out=enc_out)
+        logits_p, cache = model.prefill(params, tokens, max_seq=T + 8,
+                                        enc_out=enc_out)
+    assert h.shape == (B, T, cfg.d_model), h.shape
+    logits_f = model.logits(params, h[:, -1])
+    assert jnp.isfinite(logits_f).all(), "forward logits NaN"
+    assert jnp.isfinite(logits_p).all(), "prefill logits NaN"
+    # prefill last-token logits must match forward last-token logits
+    diff = jnp.max(jnp.abs(logits_f - logits_p))
+    # decode one token, compare against forward of extended sequence
+    nxt = jnp.argmax(logits_p, -1).astype(jnp.int32)
+    logits_d, cache = model.decode_step(params, nxt, cache)
+    assert jnp.isfinite(logits_d).all(), "decode logits NaN"
+    if not cfg.uses_input_embeds:
+        ext = jnp.concatenate([tokens, nxt[:, None]], axis=1)
+        h2 = model.forward(params, ext, enc_out=enc_out)
+        logits_ref = model.logits(params, h2[:, -1])
+        ddiff = jnp.max(jnp.abs(logits_d - logits_ref))
+    else:
+        ddiff = -1.0
+    print(f"{arch:24s} params={n/1e6:7.2f}M prefill_diff={diff:.4f} "
+          f"decode_diff={float(ddiff):.4f}")
+
+
+if __name__ == "__main__":
+    archs = sys.argv[1:] or ARCH_IDS
+    for a in archs:
+        try:
+            run(a)
+        except Exception as e:
+            print(f"{a:24s} FAILED: {type(e).__name__}: {e}")
+            import traceback
+            traceback.print_exc()

@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpointer import (Checkpointer, load_checkpoint,
+                                           save_checkpoint)
+
+__all__ = ["Checkpointer", "save_checkpoint", "load_checkpoint"]

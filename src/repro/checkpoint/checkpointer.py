@@ -1,0 +1,161 @@
+"""Sharded checkpoint save/restore with async write and elastic re-mesh.
+
+Format: one directory per step containing
+  - manifest.json       pytree structure + leaf shapes/dtypes + step metadata
+  - arrays.npz          flat leaf arrays (addressable data, gathered)
+
+Restore is *elastic*: arrays are loaded host-side and re-placed under the
+CURRENT mesh's shardings (`distributed.sharding.param_shardings`), so a
+checkpoint written on one device count restarts on another — the
+fault-tolerance primitive for pod loss / resize.
+
+Writes go through a temp directory + atomic rename; `Checkpointer` keeps the
+last `keep` checkpoints and runs saves on a background thread so the train
+loop never blocks on I/O (async checkpointing).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy's savez/astype do not handle ml_dtypes natively — store raw views
+_EXOTIC = {"bfloat16": (ml_dtypes.bfloat16, np.uint16),
+           "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8)}
+
+
+def _flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0,
+                    extra: Optional[Dict] = None) -> str:
+    """Write `tree` to `path` (a directory). Returns the final path."""
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = pathlib.Path(tempfile.mkdtemp(dir=path.parent,
+                                        prefix=".tmp_ckpt_"))
+    leaves = _flatten_with_paths(tree)
+    arrays = {}
+    manifest: Dict[str, Any] = {"step": step, "leaves": [],
+                                "extra": extra or {}}
+    for i, (key, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        name = f"a{i}"
+        dtype_name = str(arr.dtype)
+        if dtype_name in _EXOTIC:
+            arr = arr.view(_EXOTIC[dtype_name][1])
+        arrays[name] = arr
+        manifest["leaves"].append({"key": key, "name": name,
+                                   "shape": list(arr.shape),
+                                   "dtype": dtype_name})
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest["treedef"] = str(treedef)
+    np.savez(tmp / "arrays.npz", **arrays)
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if path.exists():
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+    return str(path)
+
+
+def load_checkpoint(path: str, like: Any, shardings: Any = None) -> Tuple[Any, int]:
+    """Restore into the structure of `like` (shapes must match leaf-wise).
+
+    `shardings` (optional pytree of NamedSharding) re-places each leaf for
+    the current mesh — elastic restart across device counts.
+    """
+    path = pathlib.Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    with np.load(path / "arrays.npz") as z:
+        arrs = []
+        for rec in manifest["leaves"]:
+            a = z[rec["name"]]
+            if rec["dtype"] in _EXOTIC:
+                a = a.view(_EXOTIC[rec["dtype"]][0])
+            arrs.append(a)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    if len(arrs) != len(leaves_like):
+        raise ValueError(
+            f"checkpoint has {len(arrs)} leaves, target has "
+            f"{len(leaves_like)} — structure mismatch")
+    out_leaves = []
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(arrs))
+    for arr, ref, sh in zip(arrs, leaves_like, shard_leaves):
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch {arr.shape} vs {ref.shape}")
+        arr = arr.astype(ref.dtype)
+        out_leaves.append(jax.device_put(arr, sh) if sh is not None
+                          else jax.device_put(arr))
+    return treedef.unflatten(out_leaves), int(manifest["step"])
+
+
+def latest_step(root: str) -> Optional[int]:
+    root_p = pathlib.Path(root)
+    if not root_p.exists():
+        return None
+    steps = [int(p.name.split("_")[-1]) for p in root_p.iterdir()
+             if p.is_dir() and p.name.startswith("step_")]
+    return max(steps) if steps else None
+
+
+class Checkpointer:
+    """Async checkpoint manager with retention."""
+
+    def __init__(self, root: str, keep: int = 3, every: int = 50):
+        self.root = pathlib.Path(root)
+        self.keep = keep
+        self.every = every
+        self._thread: Optional[threading.Thread] = None
+
+    def maybe_save(self, step: int, tree: Any, blocking: bool = False) -> bool:
+        if step % self.every != 0:
+            return False
+        self.wait()
+        # materialize on host BEFORE handing to the writer thread
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            save_checkpoint(str(self.root / f"step_{step}"), host_tree, step)
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        return True
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, like: Any, shardings: Any = None):
+        step = latest_step(str(self.root))
+        if step is None:
+            return None, None
+        tree, s = load_checkpoint(str(self.root / f"step_{step}"), like,
+                                  shardings)
+        return tree, s
+
+    def _gc(self) -> None:
+        steps = sorted(int(p.name.split("_")[-1]) for p in self.root.iterdir()
+                       if p.is_dir() and p.name.startswith("step_"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.root / f"step_{s}", ignore_errors=True)

@@ -1,0 +1,80 @@
+"""Architecture registry: ``--arch <id>`` resolution + shape-cell definitions."""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+
+# arch id -> module name
+_MODULES: Dict[str, str] = {
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "llava-next-34b": "llava_next_34b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "gemma2-9b": "gemma2_9b",
+    "minicpm3-4b": "minicpm3_4b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "yi-9b": "yi_9b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "whisper-large-v3": "whisper_large_v3",
+    # the paper's own evaluation models
+    "deepseek-v2-lite": "deepseek_v2_lite",
+    "qwen1.5-moe-a2.7b": "qwen15_moe_a2_7b",
+    "qwen2-moe-57b": "qwen2_moe_57b",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+ASSIGNED_ARCH_IDS: List[str] = ARCH_IDS[:10]
+PAPER_ARCH_IDS: List[str] = ARCH_IDS[10:]
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch '{arch}'; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).smoke()
+
+
+# ---------------------------------------------------------------------------
+# Shape cells (assigned input shapes)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+SHAPE_NAMES = list(SHAPES)
+
+
+def cell_skip_reason(cfg: ModelConfig, shape: str) -> Optional[str]:
+    """DESIGN.md §shape-cell-skips, encoded. None = runnable."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return ("full-attention arch: 500k KV cache is the super-linear cost "
+                "this cell excludes (DESIGN.md §Shape-cell skips)")
+    if shape == "long_500k" and cfg.is_encoder_decoder:
+        return "enc-dec decoder context is architecturally bounded (448)"
+    return None
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    return [(a, s) for a in ASSIGNED_ARCH_IDS for s in SHAPE_NAMES]

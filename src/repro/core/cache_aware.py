@@ -1,0 +1,66 @@
+"""Cache-aware routing (paper §3.4).
+
+Tokens whose experts are already resident get scheduling priority; tokens
+requiring swap-ins are deferred so their transfers overlap with the
+resident-group compute. `split_by_residency` produces the priority
+permutation; `overlap_schedule` computes how much of the miss latency is
+hidden under compute.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Set, Tuple
+
+import numpy as np
+
+
+@dataclass
+class ResidencySplit:
+    resident_tokens: np.ndarray    # indices of tokens with all experts resident
+    deferred_tokens: np.ndarray    # tokens needing >=1 swap-in
+    missing_experts: List[int]     # distinct non-resident experts needed
+    order: np.ndarray              # priority permutation over tokens
+
+
+def split_by_residency(assignments: np.ndarray,
+                       resident: Set[int]) -> ResidencySplit:
+    """assignments: (T, k) expert ids for one layer."""
+    a = np.asarray(assignments)
+    T = a.shape[0]
+    res_mask = np.asarray([all(int(e) in resident for e in row) for row in a])
+    resident_tokens = np.nonzero(res_mask)[0]
+    deferred_tokens = np.nonzero(~res_mask)[0]
+    missing = sorted({int(e) for row in a[~res_mask] for e in row
+                      if int(e) not in resident})
+    order = np.concatenate([resident_tokens, deferred_tokens])
+    return ResidencySplit(resident_tokens, deferred_tokens, missing, order)
+
+
+def overlap_schedule(split: ResidencySplit, layer_compute_s: float,
+                     transfer_ready_s: float, now: float) -> Tuple[float, float]:
+    """Returns (finish_time, exposed_stall).
+
+    Resident-group compute starts immediately; deferred-group compute starts
+    at max(resident-group finish, transfer_ready). Compute time is split
+    proportionally to token counts. Without cache-aware routing the whole
+    layer waits for transfer_ready before starting.
+    """
+    T = len(split.resident_tokens) + len(split.deferred_tokens)
+    if T == 0:
+        return now, 0.0
+    frac_res = len(split.resident_tokens) / T
+    t_res = layer_compute_s * frac_res
+    t_def = layer_compute_s - t_res
+    res_done = now + t_res
+    if len(split.deferred_tokens) == 0:
+        return res_done, 0.0
+    start_def = max(res_done, transfer_ready_s)
+    exposed = max(0.0, transfer_ready_s - res_done)
+    return start_def + t_def, exposed
+
+
+def sequential_schedule(layer_compute_s: float, transfer_ready_s: float,
+                        now: float) -> Tuple[float, float]:
+    """Conventional path: block the whole layer until transfers finish."""
+    start = max(now, transfer_ready_s)
+    return start + layer_compute_s, max(0.0, transfer_ready_s - now)

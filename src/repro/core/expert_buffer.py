@@ -1,0 +1,87 @@
+"""Device-resident expert slot buffer (the TPU adaptation of the paper's
+GPU expert cache).
+
+A bounded number of *slots* hold expert FFN weights in device memory; an
+indirection table maps (layer, expert) -> slot. The host-side controller
+(`TwoLevelLRU` + prefetcher) owns the replacement policy; the device side is
+purely functional: `swap_in` is a jitted `dynamic_update_slice` (standing in
+for the async host->HBM DMA a real deployment would issue), and the MoE layer
+computes through `repro.models.moe.moe_slotbuf` using the indirection.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def make_buffer(cfg: ModelConfig, n_slots: int, dtype=jnp.bfloat16):
+    m = cfg.moe
+    assert m is not None, "slot buffer only applies to MoE configs"
+    d, f = cfg.d_model, m.d_expert
+    slots = {
+        "w_gate": jnp.zeros((n_slots, d, f), dtype),
+        "w_up": jnp.zeros((n_slots, d, f), dtype),
+        "w_down": jnp.zeros((n_slots, f, d), dtype),
+    }
+    return slots
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def swap_in(slots: Dict[str, jnp.ndarray], slot_idx: jnp.ndarray,
+            w_gate: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray):
+    """Write one expert's weights into `slot_idx` (donated: in-place)."""
+    i = jnp.asarray(slot_idx, jnp.int32)
+    return {
+        "w_gate": jax.lax.dynamic_update_slice_in_dim(
+            slots["w_gate"], w_gate[None], i, axis=0),
+        "w_up": jax.lax.dynamic_update_slice_in_dim(
+            slots["w_up"], w_up[None], i, axis=0),
+        "w_down": jax.lax.dynamic_update_slice_in_dim(
+            slots["w_down"], w_down[None], i, axis=0),
+    }
+
+
+class SlotTable:
+    """Host-side mirror: (layer, expert) <-> slot assignments."""
+
+    def __init__(self, num_layers: int, num_experts: int, n_slots: int):
+        self.L, self.E, self.n_slots = num_layers, num_experts, n_slots
+        self.slot_of = -np.ones((num_layers, num_experts), np.int32)
+        self.key_of_slot: list = [None] * n_slots
+        self.free: list = list(range(n_slots))
+
+    def lookup(self, layer: int, expert: int) -> int:
+        return int(self.slot_of[layer, expert])
+
+    def assign(self, layer: int, expert: int) -> int:
+        """Grab a free slot for (layer, expert). Caller must have evicted."""
+        if not self.free:
+            raise RuntimeError("no free slots; evict first")
+        s = self.free.pop()
+        old = self.key_of_slot[s]
+        assert old is None
+        self.key_of_slot[s] = (layer, expert)
+        self.slot_of[layer, expert] = s
+        return s
+
+    def release(self, layer: int, expert: int) -> int:
+        s = int(self.slot_of[layer, expert])
+        assert s >= 0, "releasing non-resident expert"
+        self.slot_of[layer, expert] = -1
+        self.key_of_slot[s] = None
+        self.free.append(s)
+        return s
+
+    def layer_slot_map(self, layer: int) -> np.ndarray:
+        """(E,) int32 slot ids for one layer (-1 = not resident)."""
+        return self.slot_of[layer].copy()
+
+    @property
+    def n_resident(self) -> int:
+        return int((self.slot_of >= 0).sum())

@@ -1,0 +1,78 @@
+"""Latency/stall metrics aggregation for simulator runs and engine steps."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+@dataclass
+class StepMetrics:
+    step: int = 0
+    compute_s: float = 0.0
+    waiting_s: float = 0.0        # stall on predicted-but-late experts
+    cache_miss_s: float = 0.0     # stall on unpredicted experts (demand loads)
+    n_hits: int = 0
+    n_misses: int = 0
+    n_prefetched: int = 0
+    n_overfetched: int = 0
+    step_size: int = 0
+
+    @property
+    def stall_s(self) -> float:
+        return self.waiting_s + self.cache_miss_s
+
+    @property
+    def total_s(self) -> float:
+        return self.compute_s + self.stall_s
+
+
+@dataclass
+class RunReport:
+    steps: List[StepMetrics] = field(default_factory=list)
+    policy: str = ""
+    platform: str = ""
+    model: str = ""
+
+    def add(self, m: StepMetrics) -> None:
+        self.steps.append(m)
+
+    @property
+    def total_compute_s(self) -> float:
+        return sum(s.compute_s for s in self.steps)
+
+    @property
+    def total_waiting_s(self) -> float:
+        return sum(s.waiting_s for s in self.steps)
+
+    @property
+    def total_cache_miss_s(self) -> float:
+        return sum(s.cache_miss_s for s in self.steps)
+
+    @property
+    def total_stall_s(self) -> float:
+        return self.total_waiting_s + self.total_cache_miss_s
+
+    @property
+    def total_s(self) -> float:
+        return self.total_compute_s + self.total_stall_s
+
+    @property
+    def hit_rate(self) -> float:
+        h = sum(s.n_hits for s in self.steps)
+        m = sum(s.n_misses for s in self.steps)
+        return h / (h + m) if h + m else 1.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "policy": self.policy,
+            "platform": self.platform,
+            "model": self.model,
+            "compute_s": self.total_compute_s,
+            "waiting_s": self.total_waiting_s,
+            "cache_miss_s": self.total_cache_miss_s,
+            "stall_s": self.total_stall_s,
+            "total_s": self.total_s,
+            "hit_rate": self.hit_rate,
+            "mean_step_size": (sum(s.step_size for s in self.steps)
+                               / max(len(self.steps), 1)),
+        }

@@ -1,0 +1,192 @@
+"""Transfer link model + prefetch queue (paper §3.3.2, §3.4).
+
+The host->device link is a serialized resource. Transfers carry a priority:
+cache-miss resolution preempts *queued* (not in-flight) prefetches — the
+paper's "highest priority in the memory queue". Observed transfer times feed
+the bandwidth estimate C_s back to the step-size controller.
+
+In the baseline configuration (`blocking_swap_out=True`) evictions occupy
+the link too (write-back), modelling the swap-in/swap-out contention the
+paper attributes to conventional MoE systems; ExpertFlow discards read-only
+expert weights without write-back.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+Key = Tuple[int, int]
+
+PRIO_MISS = 0        # on-demand miss: head of queue
+PRIO_PREFETCH = 1
+PRIO_WRITEBACK = 2
+
+
+@dataclass
+class Transfer:
+    key: Optional[Key]
+    nbytes: float
+    priority: int
+    issue_t: float
+    start_t: float = -1.0
+    done_t: float = -1.0
+    kind: str = "prefetch"     # prefetch | miss | writeback
+
+
+class TransferLink:
+    """Non-preemptive priority-queued serial link."""
+
+    def __init__(self, bandwidth: float):
+        self.bandwidth = bandwidth
+        self._counter = itertools.count()
+        self._queue: List[Tuple[int, int, Transfer]] = []  # (prio, seq, tr)
+        self._busy_until = 0.0
+        self.in_flight: Dict[Key, Transfer] = {}
+        self.completed: List[Transfer] = []
+        self.bytes_moved = 0.0
+
+    def submit(self, tr: Transfer) -> Transfer:
+        heapq.heappush(self._queue, (tr.priority, next(self._counter), tr))
+        if tr.key is not None:
+            self.in_flight[tr.key] = tr
+        return tr
+
+    def promote(self, key: Key) -> None:
+        """Raise a queued transfer for `key` to miss priority (§3.4)."""
+        for i, (prio, seq, tr) in enumerate(self._queue):
+            if tr.key == key and prio > PRIO_MISS:
+                tr.priority = PRIO_MISS
+                tr.kind = "miss"
+                self._queue[i] = (PRIO_MISS, seq, tr)
+                heapq.heapify(self._queue)
+                return
+
+    def drain_until(self, t: float) -> List[Transfer]:
+        """Run the link forward to time `t`; return transfers completed."""
+        done = []
+        while self._queue:
+            prio, seq, tr = self._queue[0]
+            start = max(self._busy_until, tr.issue_t)
+            if start >= t:
+                break
+            heapq.heappop(self._queue)
+            tr.start_t = start
+            tr.done_t = start + tr.nbytes / self.bandwidth
+            self._busy_until = tr.done_t
+            self.bytes_moved += tr.nbytes
+            self.completed.append(tr)
+            if tr.key is not None:
+                self.in_flight.pop(tr.key, None)
+            done.append(tr)
+        return done
+
+    def finish(self, key: Key, now: float) -> float:
+        """Run the link until `key`'s transfer completes; returns its
+        completion time. Queued items ahead of it (by priority) run first."""
+        if self._find(key) is None:
+            for c in reversed(self.completed):
+                if c.key == key:
+                    return max(c.done_t, 0.0)
+            raise KeyError(f"transfer for {key} not found")
+        while self._queue:
+            prio, seq, tr = heapq.heappop(self._queue)
+            tr.start_t = max(self._busy_until, tr.issue_t)
+            tr.done_t = tr.start_t + tr.nbytes / self.bandwidth
+            self._busy_until = tr.done_t
+            self.bytes_moved += tr.nbytes
+            self.completed.append(tr)
+            if tr.key is not None:
+                self.in_flight.pop(tr.key, None)
+            if tr.key == key:
+                return tr.done_t
+        raise KeyError(f"transfer for {key} vanished from queue")
+
+    def _find(self, key: Key) -> Optional[Transfer]:
+        for _, _, tr in self._queue:
+            if tr.key == key:
+                return tr
+        return None
+
+    def pending(self, key: Key) -> bool:
+        return self._find(key) is not None
+
+    @property
+    def busy_until(self) -> float:
+        return self._busy_until
+
+
+class Prefetcher:
+    """Issues expert transfers and tracks readiness + observed bandwidth."""
+
+    def __init__(self, link: TransferLink, expert_bytes: float,
+                 blocking_swap_out: bool = False):
+        self.link = link
+        self.expert_bytes = expert_bytes
+        self.blocking_swap_out = blocking_swap_out
+        self.ready_at: Dict[Key, float] = {}
+        self.issued: Dict[Key, Transfer] = {}
+        self.n_prefetches = 0
+        self.n_misses = 0
+        self._completed_seen = 0          # monotone index into link.completed
+        self._pending: List[Transfer] = []  # completed but not yet surfaced
+
+    def prefetch(self, key: Key, now: float) -> None:
+        if key in self.issued or key in self.ready_at:
+            return
+        tr = Transfer(key, self.expert_bytes, PRIO_PREFETCH, now)
+        self.link.submit(tr)
+        self.issued[key] = tr
+        self.n_prefetches += 1
+
+    def demand(self, key: Key, now: float) -> float:
+        """Miss path: fetch `key` at top priority; returns ready time."""
+        if key in self.ready_at:
+            return self.ready_at[key]
+        if key in self.issued:
+            self.link.promote(key)
+        else:
+            tr = Transfer(key, self.expert_bytes, PRIO_MISS, now, kind="miss")
+            self.link.submit(tr)
+            self.issued[key] = tr
+            self.n_misses += 1
+        t_done = self.link.finish(key, now)
+        self._complete(key, t_done)
+        return t_done
+
+    def writeback(self, now: float) -> None:
+        """Baseline swap-out contention: eviction occupies the link."""
+        if self.blocking_swap_out:
+            self.link.submit(Transfer(None, self.expert_bytes, PRIO_WRITEBACK,
+                                      now, kind="writeback"))
+
+    def advance(self, t: float) -> List[Key]:
+        """Advance link time; returns expert keys that became resident by t
+        (including ones completed while fast-forwarding a miss)."""
+        self.link.drain_until(t)
+        new = self.link.completed[self._completed_seen:]
+        self._completed_seen = len(self.link.completed)
+        self._pending.extend(tr for tr in new if tr.key is not None)
+        arrived = []
+        still = []
+        for tr in self._pending:
+            if tr.done_t <= t:
+                if tr.key not in self.ready_at:
+                    self._complete(tr.key, tr.done_t)
+                    arrived.append(tr.key)
+            else:
+                still.append(tr)
+        self._pending = still
+        return arrived
+
+    def _complete(self, key: Key, t_done: float) -> None:
+        self.ready_at[key] = t_done
+        self.issued.pop(key, None)
+
+    def is_ready(self, key: Key, now: float) -> bool:
+        return key in self.ready_at and self.ready_at[key] <= now
+
+    def forget(self, key: Key) -> None:
+        """Expert evicted — future use must re-fetch."""
+        self.ready_at.pop(key, None)

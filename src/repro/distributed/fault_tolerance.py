@@ -1,0 +1,113 @@
+"""Fault tolerance: checkpoint/restart orchestration + straggler mitigation.
+
+Designed for 1000+ node fleets where *something* is always failing:
+
+- `TrainRunner` wraps the step loop with periodic async checkpoints,
+  restart-from-latest on construction, and a configurable failure detector
+  hook. On a detected failure the runner re-materialises state from the last
+  checkpoint under the CURRENT mesh (elastic: the device count may have
+  changed — shardings are recomputed, data is re-placed).
+- `StragglerPolicy` implements pod-level straggler mitigation for serving:
+  per-replica latency EWMAs; a replica whose EWMA exceeds `threshold` x the
+  fleet median is drained (no new admissions) until it recovers — the
+  batcher routes around it.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+@dataclass
+class TrainRunner:
+    step_fn: Callable                      # (state, batch) -> (state, metrics)
+    checkpointer: Checkpointer
+    state: Any
+    step: int = 0
+    failure_detector: Optional[Callable[[], bool]] = None
+    on_restore: Optional[Callable[[Any], Any]] = None  # re-shard hook
+    max_retries: int = 3
+
+    def restore_if_available(self, like: Any, shardings: Any = None) -> bool:
+        restored, step = self.checkpointer.restore_latest(like, shardings)
+        if restored is None:
+            return False
+        self.state = restored if self.on_restore is None \
+            else self.on_restore(restored)
+        self.step = step
+        return True
+
+    def run(self, batches, num_steps: int,
+            metrics_cb: Optional[Callable[[int, Dict], None]] = None) -> Any:
+        retries = 0
+        it = iter(batches)
+        while self.step < num_steps:
+            batch = next(it)
+            try:
+                if self.failure_detector and self.failure_detector():
+                    raise RuntimeError("failure detected by monitor")
+                self.state, metrics = self.step_fn(self.state, batch)
+                self.step += 1
+                retries = 0
+                if metrics_cb:
+                    metrics_cb(self.step, metrics)
+                self.checkpointer.maybe_save(self.step, self.state)
+            except Exception:
+                retries += 1
+                if retries > self.max_retries:
+                    raise
+                # restart path: reload last durable state and continue
+                restored, step = self.checkpointer.restore_latest(self.state)
+                if restored is not None:
+                    self.state = restored if self.on_restore is None \
+                        else self.on_restore(restored)
+                    self.step = step
+        self.checkpointer.wait()
+        return self.state
+
+
+@dataclass
+class ReplicaHealth:
+    ewma_s: float = 0.0
+    n: int = 0
+    draining: bool = False
+
+
+class StragglerPolicy:
+    """Pod-replica straggler detection for the serving fleet."""
+
+    def __init__(self, n_replicas: int, threshold: float = 2.0,
+                 alpha: float = 0.2, recovery: float = 1.2):
+        self.replicas = [ReplicaHealth() for _ in range(n_replicas)]
+        self.threshold = threshold
+        self.recovery = recovery
+        self.alpha = alpha
+
+    def record(self, replica: int, latency_s: float) -> None:
+        r = self.replicas[replica]
+        r.ewma_s = latency_s if r.n == 0 else \
+            (1 - self.alpha) * r.ewma_s + self.alpha * latency_s
+        r.n += 1
+        med = self.median()
+        if med > 0:
+            if r.ewma_s > self.threshold * med:
+                r.draining = True
+            elif r.draining and r.ewma_s < self.recovery * med:
+                r.draining = False
+
+    def median(self) -> float:
+        vals = [r.ewma_s for r in self.replicas if r.n > 0]
+        return float(np.median(vals)) if vals else 0.0
+
+    def healthy_replicas(self) -> List[int]:
+        return [i for i, r in enumerate(self.replicas) if not r.draining]
+
+    def pick(self, step: int) -> int:
+        """Round-robin over healthy replicas."""
+        healthy = self.healthy_replicas() or list(range(len(self.replicas)))
+        return healthy[step % len(healthy)]

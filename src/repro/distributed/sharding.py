@@ -1,0 +1,240 @@
+"""Sharding rules: logical axes -> mesh axes, param specs, activation hints.
+
+Axes:
+- ``model``  tensor-parallel (attention heads, FFN hidden) AND expert-parallel
+             (MoE expert dim) — one physical axis, two logical roles.
+- ``data``   batch sharding; in training additionally FSDP: parameters and
+             optimizer state sharded over ``data`` and all-gathered per use.
+- ``pod``    multi-pod replica axis (pure DP; gradient all-reduce crosses it).
+
+`constrain` is a safe `with_sharding_constraint`: it is a no-op unless a mesh
+context is active, silently drops axes absent from the mesh, and drops
+assignments that do not divide the dimension (e.g. batch=1 long-context decode
+cannot shard over ``data``).
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: dict = {"mesh": None, "fsdp": False}
+
+BATCH = "__batch__"   # symbolic: expands to ("pod", "data") ∩ mesh axes
+
+
+def set_mesh(mesh: Optional[Mesh], fsdp: bool = False) -> None:
+    _ACTIVE["mesh"] = mesh
+    _ACTIVE["fsdp"] = fsdp
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _ACTIVE["mesh"]
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, fsdp: bool = False):
+    prev = dict(_ACTIVE)
+    set_mesh(mesh, fsdp)
+    try:
+        yield
+    finally:
+        _ACTIVE.update(prev)
+
+
+def _expand(entry, mesh: Mesh):
+    """Translate a symbolic spec entry to concrete mesh axes (or None)."""
+    if entry is None:
+        return None
+    names = mesh.axis_names
+    if entry == BATCH or entry == "data":
+        axes = tuple(a for a in ("pod", "data") if a in names)
+        return axes if axes else None
+    if isinstance(entry, (tuple, list)):
+        axes = tuple(a for a in entry if a in names)
+        return axes if axes else None
+    return entry if entry in names else None
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def resolve_spec(spec: Sequence, shape: Tuple[int, ...],
+                 mesh: Mesh) -> P:
+    """Concrete PartitionSpec with divisibility guards."""
+    out = []
+    for dim, entry in zip(shape, spec):
+        e = _expand(entry, mesh)
+        if e is not None and dim % _axis_size(mesh, e) != 0:
+            e = None
+        out.append(e)
+    return P(*out)
+
+
+def constrain(x: jnp.ndarray, spec: Sequence) -> jnp.ndarray:
+    """Safe with_sharding_constraint (no-op without an active mesh)."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None or not hasattr(x, "shape"):
+        return x
+    p = resolve_spec(spec, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, p))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (name-based)
+# ---------------------------------------------------------------------------
+
+def _param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+                fsdp: bool) -> Sequence:
+    """Symbolic spec for a parameter, given its key path and *logical* shape
+    (leading stack dims already stripped)."""
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+    d = "data" if fsdp else None
+
+    if name == "embed":
+        return ("model", d)
+    if name == "lm_head":
+        return (d, "model")
+    if name in ("wq", "wq_b"):                       # (d|r, H, hd)
+        return (d, "model", None)
+    if name in ("wk", "wv"):                         # (d, Hkv, hd)
+        return (d, "model", None)
+    if name == "wo":                                 # (H, hd, d)
+        return ("model", None, d)
+    if name in ("wq_a", "wkv_a"):                    # (d, r)
+        return (d, None)
+    if name == "wkv_b":                              # (r, H, hd)
+        return (None, "model", None)
+    if name == "router":                             # (d, E) — small, replicated
+        return (None, None)
+    if parent == "moe" and name in ("w_gate", "w_up"):   # (E, d, f)
+        return ("model", d, None)
+    if parent == "moe" and name == "w_down":             # (E, f, d)
+        return ("model", None, d)
+    if name in ("w_gate", "w_up"):                   # dense ffn (d, ff)
+        return (d, "model")
+    if name == "w_down":                             # (ff, d)
+        return ("model", d)
+    # recurrent / xlstm
+    if name in ("w_x",):                             # (d, w)
+        return (d, "model")
+    if name == "conv_w":                             # (K, w)
+        return (None, "model")
+    if name in ("w_input_gate", "w_rec_gate"):       # (w, w)
+        return ("model", None)
+    if name == "w_out":                              # (w, d)
+        return ("model", d)
+    if name in ("w_q", "w_k", "w_v", "w_z", "w_o"):  # (up, up)
+        return (d, "model")
+    if name == "w_i" or name == "w_f":               # (up, H)
+        return (None, None)
+    if name == "r_z":                                # (H, hd, hd)
+        return (None, None, None)
+    # norms, biases, scalars
+    return tuple(None for _ in shape)
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    keys = []
+    for p in path:
+        if hasattr(p, "key"):
+            keys.append(str(p.key))
+        elif hasattr(p, "idx"):
+            keys.append(f"[{p.idx}]")
+        else:
+            keys.append(str(p))
+    return tuple(keys)
+
+
+def _is_stacked(keys: Tuple[str, ...]) -> bool:
+    """unit/encoder-layer params carry a leading num_units stack dim."""
+    return any(k == "unit" for k in keys) or any(k == "layers" for k in keys)
+
+
+def param_specs(params: Any, fsdp: bool = False) -> Any:
+    """Pytree of symbolic specs matching `params` structure."""
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        shape = tuple(getattr(leaf, "shape", ()))
+        stacked = _is_stacked(keys)
+        logical = shape[1:] if stacked and len(shape) >= 1 else shape
+        spec = _param_spec(tuple(k for k in keys if not k.startswith("[")),
+                           logical, fsdp)
+        if stacked:
+            spec = (None,) + tuple(spec)
+        # pad/trim to rank
+        spec = tuple(spec)[:len(shape)]
+        spec = spec + (None,) * (len(shape) - len(spec))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def gather_for_compute(layer_params: Any) -> Any:
+    """FSDP weight-gathering: constrain each weight to its non-FSDP spec
+    (model-axis only) right before use.
+
+    Without this, matmuls contract over the data-sharded d_model dim and
+    GSPMD emits an ACTIVATION-sized all-reduce per matmul per layer —
+    measured at 7.35 TB/device/step on qwen3-moe train_4k. With it, the
+    collective is one WEIGHT-sized all-gather per layer (storage stays
+    sharded; gradients reduce-scatter back automatically).
+
+    No-op when no mesh context is active or fsdp is off.
+    """
+    if _ACTIVE["mesh"] is None or not _ACTIVE["fsdp"]:
+        return layer_params
+    specs = param_specs(layer_params, fsdp=False)
+
+    def one(path, x, s):
+        keys = _path_keys(path)
+        # routed expert weights enter the shard_map EP layer with their
+        # stored FSDP sharding (gathered inside, over 'data' only)
+        if "moe" in keys and keys[-1] in ("w_gate", "w_up", "w_down") \
+                and "shared" not in keys:
+            return x
+        return constrain(x, s) if hasattr(x, "shape") else x
+
+    return jax.tree_util.tree_map_with_path(one, layer_params, specs)
+
+
+def param_shardings(params: Any, mesh: Mesh, fsdp: bool = False) -> Any:
+    """Pytree of NamedShardings for `params` (shapes or arrays)."""
+    specs = param_specs(params, fsdp)
+
+    def to_sharding(leaf, spec):
+        shape = tuple(getattr(leaf, "shape", ()))
+        return NamedSharding(mesh, resolve_spec(spec, shape, mesh))
+
+    return jax.tree.map(to_sharding, params, specs)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh: Mesh, rank: int, batch_dim: int = 0,
+                   batch_size: Optional[int] = None) -> NamedSharding:
+    spec: list = [None] * rank
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if axes:
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if batch_size is None or batch_size % n == 0:
+            spec[batch_dim] = axes
+    return NamedSharding(mesh, P(*spec))

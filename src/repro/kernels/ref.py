@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_ffn_ref(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+                   w_down: jnp.ndarray) -> jnp.ndarray:
+    """Grouped expert FFN. x: (E, C, D); weights (E, D, F)/(E, F, D).
+    Returns (E, C, D) float32."""
+    g = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   w_gate.astype(jnp.float32))
+    u = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                   w_up.astype(jnp.float32))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, w_down.astype(jnp.float32))
+
+
+def topk_gating_ref(logits: jnp.ndarray, k: int, norm: bool = True):
+    """Fused softmax + top-k. logits: (T, E) -> (gates (T,k) f32, ids (T,k) i32)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, ids = jax.lax.top_k(probs, k)
+    if norm:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, ids.astype(jnp.int32)
+
+
+def slot_ffn_ref(x: jnp.ndarray, slot_of_expert: jnp.ndarray,
+                 s_gate: jnp.ndarray, s_up: jnp.ndarray,
+                 s_down: jnp.ndarray) -> jnp.ndarray:
+    """Expert FFN where weights come from a slot buffer via indirection.
+
+    x: (E, C, D) per-expert dispatch buffer; slot_of_expert: (E,) int32
+    (must be valid, i.e. >= 0); slot buffers (S, D, F)/(S, F, D).
+    """
+    wg = s_gate[slot_of_expert]
+    wu = s_up[slot_of_expert]
+    wd = s_down[slot_of_expert]
+    return expert_ffn_ref(x, wg, wu, wd)

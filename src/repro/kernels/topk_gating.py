@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: fused softmax + top-k router gating.
+
+One VMEM pass over a (T-tile, E) block: softmax then k iterations of
+max/argmax/mask — avoids the HBM round-trips XLA emits between the softmax
+and a separate top-k. E (expert count) stays whole in the lane dimension
+(E <= 256 for every assigned arch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _topk_kernel(logits_ref, gates_ref, ids_ref, *, k: int, norm: bool):
+    x = logits_ref[...].astype(jnp.float32)            # (Tb, E)
+    Tb, E = x.shape
+    m = jnp.max(x, axis=-1, keepdims=True)
+    p = jnp.exp(x - m)
+    probs = p / jnp.sum(p, axis=-1, keepdims=True)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (Tb, E), 1)
+    total = jnp.zeros((Tb, 1), jnp.float32)
+    work = probs
+    vals = []
+    idxs = []
+    for j in range(k):
+        v = jnp.max(work, axis=-1, keepdims=True)      # (Tb, 1)
+        is_max = work == v
+        # first max index along E
+        idx = jnp.min(jnp.where(is_max, iota, E), axis=-1, keepdims=True)
+        work = jnp.where(iota == idx, NEG, work)
+        vals.append(v)
+        idxs.append(idx)
+        total = total + v
+    gates = jnp.concatenate(vals, axis=-1)             # (Tb, k)
+    if norm:
+        gates = gates / jnp.maximum(total, 1e-9)
+    gates_ref[...] = gates
+    ids_ref[...] = jnp.concatenate(idxs, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "norm", "block_t",
+                                             "interpret"))
+def topk_gating(logits: jnp.ndarray, k: int, *, norm: bool = True,
+                block_t: int = 256, interpret: bool = False):
+    """logits: (T, E) -> (gates (T, k) f32, ids (T, k) i32)."""
+    T, E = logits.shape
+    block_t = min(block_t, T)
+    pad = (-T) % block_t
+    x = jnp.pad(logits, ((0, pad), (0, 0))) if pad else logits
+    Tp = x.shape[0]
+    gates, ids = pl.pallas_call(
+        functools.partial(_topk_kernel, k=k, norm=norm),
+        grid=(Tp // block_t,),
+        in_specs=[pl.BlockSpec((block_t, E), lambda t: (t, 0))],
+        out_specs=[pl.BlockSpec((block_t, k), lambda t: (t, 0)),
+                   pl.BlockSpec((block_t, k), lambda t: (t, 0))],
+        out_shape=[jax.ShapeDtypeStruct((Tp, k), jnp.float32),
+                   jax.ShapeDtypeStruct((Tp, k), jnp.int32)],
+        interpret=interpret,
+    )(x)
+    return gates[:T], ids[:T]

@@ -1,0 +1,176 @@
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, extract memory/cost/collective analysis, and write one
+JSON report per cell.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod-only
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import (ASSIGNED_ARCH_IDS, SHAPES, SHAPE_NAMES,
+                                    cell_skip_reason, get_config)
+from repro.distributed import sharding as shd
+from repro.launch import roofline as rl
+from repro.launch.hlo import collective_stats, loop_aware_collective_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (abstract_batch, abstract_opt_state,
+                                abstract_params, decode_inputs)
+from repro.models import Model
+from repro.training.steps import (make_prefill_step, make_serve_step,
+                                  make_train_step)
+
+REPORT_DIR = pathlib.Path(__file__).resolve().parents[3] / "reports" / "dryrun"
+
+
+def build_lowering(cfg, model, cell, mesh):
+    """jit(...).lower(...) for one cell on one mesh."""
+    kind = cell.kind
+    fsdp = kind == "train"
+    # weights are sharded over BOTH axes in serving too (no optimizer state,
+    # but 104B/235B-class weights do not fit 16 GB/chip at model-axis-only
+    # sharding; the per-layer all-gather is the standard trade)
+    with shd.mesh_context(mesh, fsdp=fsdp):
+        params = abstract_params(model, mesh, fsdp=True)
+        if kind == "train":
+            opt = abstract_opt_state(params, mesh, fsdp=True)
+            batch = abstract_batch(cfg, cell, mesh, "train")
+            step = make_train_step(model)
+            # params/opt are donated in the real loop — reflect that here so
+            # memory_analysis matches production
+            return jax.jit(step, donate_argnums=(0, 1)).lower(
+                params, opt, batch)
+        if kind == "prefill":
+            batch = abstract_batch(cfg, cell, mesh, "prefill")
+            step = make_prefill_step(model, max_seq=cell.seq_len)
+            return jax.jit(step).lower(params, batch)
+        # decode: the cache is donated (updated in place each step)
+        token, cache = decode_inputs(cfg, cell, mesh, model)
+        step = make_serve_step(model)
+        return jax.jit(step, donate_argnums=(2,)).lower(params, token, cache)
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             with_components: bool = True) -> dict:
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    out = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "status": "ok"}
+
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        out.update(status="skip", reason=skip)
+        return out
+
+    model = Model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+
+    t0 = time.time()
+    lowered = build_lowering(cfg, model, cell, mesh)
+    compiled = lowered.compile()
+    t1 = time.time()
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    coll = collective_stats(hlo_text)
+    loop_coll = loop_aware_collective_stats(hlo_text)
+    out.update(
+        loop_collective_bytes=loop_coll.total_bytes,
+        loop_collective_bytes_by_kind=loop_coll.bytes_by_kind,
+        loop_collective_counts=loop_coll.count_by_kind,
+        compile_seconds=round(t1 - t0, 2),
+        peak_memory_bytes=int(getattr(mem, "peak_memory_in_bytes", 0)),
+        argument_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+        output_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+        temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+        raw_flops_per_device=float(ca.get("flops", 0.0)),
+        raw_bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+        raw_collective_bytes=coll.total_bytes,
+        raw_collective_counts=coll.count_by_kind,
+        raw_collective_bytes_by_kind=coll.bytes_by_kind,
+    )
+
+    if with_components and not multi_pod:
+        with shd.mesh_context(mesh, fsdp=(cell.kind == "train")):
+            comps = rl.component_costs(model, cfg, cell, mesh, cell.kind)
+        rep = rl.RooflineReport(
+            arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+            components=comps,
+            model_flops_global=rl.model_flops(cfg, cell),
+            raw_flops=out["raw_flops_per_device"],
+            raw_bytes=out["raw_bytes_per_device"],
+            raw_coll_bytes=out["raw_collective_bytes"],
+            peak_memory_bytes=out["peak_memory_bytes"],
+            compile_seconds=out["compile_seconds"],
+            min_bytes_per_device=rl.analytic_min_bytes(cfg, cell, chips),
+            loop_coll_bytes=out["loop_collective_bytes"])
+        out["roofline"] = rep.to_dict()
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--no-components", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells that already have reports")
+    args = ap.parse_args()
+
+    REPORT_DIR.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else ASSIGNED_ARCH_IDS
+    shapes = [args.shape] if args.shape else SHAPE_NAMES
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(False)
+    if not args.single_pod_only:
+        meshes.append(True)
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                path = REPORT_DIR / f"{tag}.json"
+                if path.exists() and not args.force:
+                    prev = json.loads(path.read_text())
+                    print(f"[cached] {tag}: {prev['status']}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp,
+                                   with_components=not args.no_components)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "fail", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                path.write_text(json.dumps(rec, indent=1))
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skip"
+                n_fail += st == "fail"
+                msg = rec.get("reason") or rec.get("error") or \
+                    f"compile={rec.get('compile_seconds')}s " \
+                    f"peak={rec.get('peak_memory_bytes', 0)/2**30:.2f}GiB"
+                print(f"[{st:4s}] {tag}: {msg}", flush=True)
+    print(f"done: ok={n_ok} skip={n_skip} fail={n_fail}")
+
+
+if __name__ == "__main__":
+    main()

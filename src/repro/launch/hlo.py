@@ -1,0 +1,213 @@
+"""HLO-text analysis: collective-traffic extraction for the roofline.
+
+`compiled.cost_analysis()` has no collective accounting, so we parse the
+(post-SPMD, per-device) HLO. The default HLO printer shows shapes only on
+the RESULT of each instruction (operands are printed as bare `%names`), so
+operand bytes are derived from the result shape per collective kind:
+
+  all-reduce          operand == result
+  all-to-all          operand == result
+  collective-permute  operand == result
+  all-gather          operand == result / group_size
+  reduce-scatter      operand == result * group_size
+
+`group_size` comes from the replica_groups attribute (both the explicit
+`{{0,1,..},{..}}` and iota `[G,S]<=[N]` forms are parsed). All byte totals
+are per-device (the partitioned module's shapes are per-device).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "bf16[16,4096]{1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# "%name = <result-shape(s)> <op>(" — everything between '=' and the opcode
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(")
+# replica_groups={{0,1,2},{3,4,5}}  -> first group size
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+# replica_groups=[8,32]<=[256]     -> 8 groups of 32
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def merged(self, other: "CollectiveStats") -> "CollectiveStats":
+        out = CollectiveStats(dict(self.bytes_by_kind),
+                              dict(self.count_by_kind))
+        for k in other.bytes_by_kind:
+            out.bytes_by_kind[k] = out.bytes_by_kind.get(k, 0) + \
+                other.bytes_by_kind[k]
+            out.count_by_kind[k] = out.count_by_kind.get(k, 0) + \
+                other.count_by_kind.get(k, 0)
+        return out
+
+
+def _collective_of_line(line: str):
+    """(kind, bytes) if the line is a collective op, else None."""
+    m = _OP_RE.match(line)
+    if not m:
+        return None
+    op = m.group(2)
+    kind = None
+    for c in _COLLECTIVES:
+        if op == c or op.startswith(c + "-"):   # *-start variants
+            kind = c
+            break
+    if kind is None or op.endswith("-done"):
+        return None
+    result_bytes = sum(_shape_bytes(d, dims)
+                       for d, dims in _SHAPE_RE.findall(m.group(1)))
+    if result_bytes == 0:
+        return None
+    g = _group_size(line)
+    if kind == "all-gather":
+        nbytes = result_bytes // max(g, 1)
+    elif kind == "reduce-scatter":
+        nbytes = result_bytes * g
+    else:
+        nbytes = result_bytes
+    return kind, nbytes
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Per-device operand bytes of every collective op (flat: each op counted
+    once regardless of loop nesting — see loop_aware_collective_stats)."""
+    stats = CollectiveStats(defaultdict(int), defaultdict(int))
+    for line in hlo_text.splitlines():
+        hit = _collective_of_line(line)
+        if hit:
+            kind, nbytes = hit
+            stats.bytes_by_kind[kind] += nbytes
+            stats.count_by_kind[kind] += 1
+    stats.bytes_by_kind = dict(stats.bytes_by_kind)
+    stats.count_by_kind = dict(stats.count_by_kind)
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Loop-aware accounting: collectives inside while bodies execute trip_count
+# times per step; the flat parse counts them once. We reconstruct the
+# computation graph from the HLO text, read each while's trip count from its
+# condition computation's comparison constant, and multiply.
+# ---------------------------------------------------------------------------
+
+_COMP_HEADER_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+
+
+def _split_computations(text: str):
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    entry = None
+    for line in text.splitlines():
+        m = _COMP_HEADER_RE.match(line.strip())
+        if m and ("{" in line or line.rstrip().endswith("{")):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.strip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    consts = [int(m.group(1)) for line in cond_lines
+              for m in _CONST_RE.finditer(line)]
+    return max(consts) if consts else 1
+
+
+def loop_aware_collective_stats(hlo_text: str) -> CollectiveStats:
+    """Collective bytes with while-body contributions scaled by trip count."""
+    comps, entry_name = _split_computations(hlo_text)
+    if entry_name is None:
+        return collective_stats(hlo_text)
+
+    # per-computation: direct collectives + (callee, multiplier) edges
+    direct: Dict[str, List] = {}
+    edges: Dict[str, List] = {}
+    for name, lines in comps.items():
+        d, e = [], []
+        for line in lines:
+            hit = _collective_of_line(line)
+            if hit:
+                d.append(hit)
+            if " while(" in line:
+                bm = _WHILE_BODY_RE.search(line)
+                cm2 = _WHILE_COND_RE.search(line)
+                if bm:
+                    trips = _trip_count(
+                        comps.get(cm2.group(1), []) if cm2 else [])
+                    e.append((bm.group(1), max(trips, 1)))
+                continue
+            cm = _CALL_RE.search(line)
+            if cm and "fusion" not in line:
+                e.append((cm.group(1), 1))
+        direct[name] = d
+        edges[name] = e
+
+    stats = CollectiveStats(defaultdict(int), defaultdict(int))
+
+    def visit(name: str, mult: int, depth: int = 0):
+        if depth > 12 or name not in direct:
+            return
+        for kind, nbytes in direct[name]:
+            stats.bytes_by_kind[kind] += nbytes * mult
+            stats.count_by_kind[kind] += mult
+        for callee, trips in edges[name]:
+            visit(callee, mult * trips, depth + 1)
+
+    visit(entry_name, 1)
+    stats.bytes_by_kind = dict(stats.bytes_by_kind)
+    stats.count_by_kind = dict(stats.count_by_kind)
+    return stats

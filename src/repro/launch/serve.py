@@ -1,0 +1,110 @@
+"""Serving driver: continuous batching + ExpertFlow runtime + simulator.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch deepseek-v2-lite \
+        --requests 16 --max-new 12 --platform a6000
+
+Runs the real reduced-config model (routing traces from actual execution),
+trains the forest predictor on a warmup split, then reports
+baseline / pre-gate / ProMoE-like / ExpertFlow stall latencies from the
+discrete-event simulator, plus the continuous-batching stats.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_smoke_config
+from repro.core import (FeatureSpec, ForestPredictor, TraceLog, baseline,
+                        expertflow, pregate_fixed, promoe_like)
+from repro.data.pipeline import batch_requests, sharegpt_like
+from repro.runtime.batching import ContinuousBatcher
+from repro.runtime.engine import Engine
+from repro.runtime.request import Request
+from repro.simulator.events import SimSpec, simulate
+from repro.simulator.hardware import (DEFAULT_EXPERT_MEM_FRACTION, PLATFORMS,
+                                      expert_bytes, layer_time_decode)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v2-lite")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--platform", default="a6000",
+                    choices=sorted(PLATFORMS))
+    ap.add_argument("--capacity-frac", type=float, default=0.6)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    hw = PLATFORMS[args.platform]
+
+    # deployment capacity plan for the FULL architecture on this platform
+    from repro.configs.registry import get_config
+    from repro.core.capacity_planner import plan
+    full_cfg = get_config(args.arch)
+    cap_plan = plan(full_cfg, hw, batch=args.batch, kv_len=1024)
+    print(f"capacity plan ({full_cfg.name} on {hw.name}): "
+          f"{cap_plan.summary()}")
+
+    eng = Engine(cfg, max_seq=256)
+
+    # --- continuous batching over a ShareGPT-like workload ---------------
+    reqs = sharegpt_like(vocab_size=cfg.vocab_size,
+                         length_groups=(8, 16, 32), per_group=4)
+    batcher = ContinuousBatcher(max_batch=args.batch)
+    for r in reqs[:args.requests]:
+        batcher.submit(Request(r.tokens, max_new_tokens=args.max_new))
+
+    # run groups through the engine (slot-granular joins happen per wave)
+    all_traces = []
+    all_logs = TraceLog()
+    wave = 0
+    while batcher.has_work:
+        admitted = batcher.admit()
+        if not admitted:
+            break
+        toks, lens = batch_requests(
+            [type("W", (), {"tokens": r.prompt})() for r in admitted],
+            batch=len(admitted))
+        out, trace, log = eng.generate(toks, n_steps=args.max_new)
+        all_traces.append(trace)
+        all_logs.extend(log.samples)
+        for i, r in enumerate(admitted):
+            for t in range(args.max_new):
+                batcher.step({r.slot: int(out[i, t])})
+        wave += 1
+    print(f"served {batcher.stats.completed} requests in {wave} waves; "
+          f"mean occupancy {batcher.stats.mean_occupancy:.2f}")
+
+    # --- predictor training on collected traces ---------------------------
+    trace = all_traces[0]
+    for t in all_traces[1:]:
+        trace.steps.extend(t.steps)
+    L, M = trace.num_moe_layers, trace.num_experts
+    spec = FeatureSpec(cfg.vocab_size, 16, L, M, include_pregate=True)
+    forest = ForestPredictor(spec)
+    mse = forest.fit(all_logs)
+    print(f"forest trained on {len(all_logs.samples)} samples, mse={mse:.4f}")
+
+    # --- policy comparison -------------------------------------------------
+    ebytes = expert_bytes(cfg)
+    sim = SimSpec(
+        expert_bytes=max(ebytes, 4e6),   # floor so transfers are visible
+        layer_time_s=layer_time_decode(cfg, hw, args.batch, 64),
+        capacity_experts=max(4, int(L * M * args.capacity_frac)))
+    print(f"platform={hw.name} expert_bytes={sim.expert_bytes/1e6:.1f}MB "
+          f"layer_time={sim.layer_time_s*1e3:.3f}ms "
+          f"capacity={sim.capacity_experts}/{L*M}")
+    for pol in [baseline(), pregate_fixed(2), promoe_like(2),
+                expertflow()]:
+        rep = simulate(trace, sim, hw, pol, forest=forest)
+        s = rep.summary()
+        print(f"  {s['policy']:14s} stall={s['stall_s']*1e3:9.3f}ms "
+              f"hit={s['hit_rate']:.3f} S={s['mean_step_size']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""ShapeDtypeStruct input builders for every (arch x shape) dry-run cell.
+
+No device allocation: parameters, optimizer state, batches, and KV caches are
+all abstract `ShapeDtypeStruct`s with `NamedSharding`s attached — `jit.lower`
+consumes them directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import ShapeCell
+from repro.distributed.sharding import (batch_sharding, param_shardings,
+                                        replicated, resolve_spec)
+from repro.models.transformer import Model
+from repro.training.optimizer import AdamWState
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def with_shardings(shapes: Any, shardings: Any) -> Any:
+    return jax.tree.map(
+        lambda s, sh: _sds(s.shape, s.dtype, sh), shapes, shardings)
+
+
+def abstract_params(model: Model, mesh: Mesh, fsdp: bool):
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    shardings = param_shardings(shapes, mesh, fsdp=fsdp)
+    return with_shardings(shapes, shardings)
+
+
+def abstract_opt_state(params_abs, mesh: Mesh, fsdp: bool):
+    def f32_like(t):
+        return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape,
+                                                           jnp.float32), t)
+    m = f32_like(params_abs)
+    shard = param_shardings(m, mesh, fsdp=fsdp)
+    return AdamWState(
+        _sds((), jnp.int32, replicated(mesh)),
+        with_shardings(m, shard),
+        with_shardings(m, shard),
+    )
+
+
+def _cache_sharding(mesh: Mesh, shape: Tuple[int, ...],
+                    batch: int) -> NamedSharding:
+    """Cache sharding: dim0=batch -> data axes; a feature dim -> model.
+
+    NEVER shard the sequence axis (dim1 of rank>=3 caches): decode inserts
+    with dynamic_update_slice at a traced index along it, which GSPMD can
+    only partition by replicating — that was a measured 80 GiB/device
+    blow-up on decode_32k. Preference order for the model axis: heads
+    (dim2), then head_dim/feature (dim3+), largest divisible first.
+    """
+    rank = len(shape)
+    spec: list = [None] * rank
+    # locate the batch dim: unit-scan caches are stacked (U, B, ...),
+    # prefix/tail caches are (B, ...)
+    b_idx = None
+    for i in range(min(2, rank)):
+        if shape[i] == batch:
+            b_idx = i
+            break
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if b_idx is not None and daxes:
+        n = 1
+        for a in daxes:
+            n *= mesh.shape[a]
+        if batch % n == 0:
+            spec[b_idx] = daxes
+    if "model" in mesh.axis_names:
+        start = (b_idx + 1) if b_idx is not None else 1
+        if rank - start >= 2:
+            start += 1               # skip the seq/DUS axis
+        msize = mesh.shape["model"]
+        for i in range(start, rank):
+            if shape[i] % msize == 0 and shape[i] >= msize:
+                spec[i] = "model"
+                break
+    return NamedSharding(mesh, P(*spec))
+
+
+def abstract_cache(model: Model, mesh: Mesh, batch: int, max_seq: int,
+                   src_len: int = 0):
+    shapes = jax.eval_shape(
+        lambda: model.init_cache(batch, max_seq, src_len))
+    return jax.tree.map(
+        lambda s: _sds(s.shape, s.dtype,
+                       _cache_sharding(mesh, s.shape, batch)
+                       if s.ndim >= 2 else replicated(mesh)),
+        shapes)
+
+
+def abstract_batch(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                   kind: str) -> Dict[str, Any]:
+    """Training / prefill batch ShapeDtypeStructs for one shape cell."""
+    B, S = cell.global_batch, cell.seq_len
+    bs2 = lambda rank, shape, dt: _sds(
+        shape, dt, batch_sharding(mesh, rank, 0, B))
+    batch: Dict[str, Any] = {}
+    if cfg.is_encoder_decoder:
+        # enc-dec token budget: frames + decoder tokens == S per sample
+        enc_len = min(cfg.max_source_positions * 2, max(S // 2, 8))
+        dec_len = max(S - enc_len, 8) if kind == "train" else min(S, 448)
+        if kind == "prefill":
+            enc_len, dec_len = S, 448   # stress encoder at the cell seq_len
+        batch["frames"] = bs2(3, (B, enc_len, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = bs2(2, (B, dec_len), jnp.int32)
+        if kind == "train":
+            batch["labels"] = bs2(2, (B, dec_len), jnp.int32)
+    elif cfg.uses_input_embeds:
+        batch["embeds"] = bs2(3, (B, S, cfg.d_model), jnp.bfloat16)
+        if kind == "train":
+            batch["labels"] = bs2(2, (B, S), jnp.int32)
+    else:
+        batch["tokens"] = bs2(2, (B, S), jnp.int32)
+        if kind == "train":
+            batch["labels"] = bs2(2, (B, S), jnp.int32)
+    return batch
+
+
+def decode_inputs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                  model: Model):
+    """(token, cache) abstract inputs for serve_step at this cell."""
+    B, S = cell.global_batch, cell.seq_len
+    token = _sds((B,), jnp.int32, batch_sharding(mesh, 1, 0, B))
+    src = cfg.max_source_positions if cfg.is_encoder_decoder else 0
+    cache = abstract_cache(model, mesh, B, S, src_len=src)
+    return token, cache

@@ -1,0 +1,3 @@
+from repro.models.transformer import Model, build_layout, LayerSpec
+
+__all__ = ["Model", "build_layout", "LayerSpec"]

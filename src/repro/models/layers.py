@@ -1,0 +1,82 @@
+"""Core neural-net primitives shared by every architecture (pure JAX)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6,
+             *, zero_centered: bool = False) -> jnp.ndarray:
+    """RMSNorm in fp32 accumulation (gemma uses (1+scale))."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    w = (1.0 + scale.astype(jnp.float32)) if zero_centered else scale.astype(jnp.float32)
+    return (y * w).astype(dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary position embedding.
+
+    x: (..., seq, heads, head_dim); positions: (..., seq) int32.
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freq  # (..., seq, half)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    """Gated FFN: (act(x@Wg) * (x@Wu)) @ Wd."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    if act == "gelu":
+        h = jax.nn.gelu(g, approximate=True) * u
+    else:
+        h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def gelu_mlp(x: jnp.ndarray, w_in: jnp.ndarray, b_in: jnp.ndarray,
+             w_out: jnp.ndarray, b_out: jnp.ndarray) -> jnp.ndarray:
+    """Plain 2-layer GELU MLP (whisper)."""
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_in) + b_in, approximate=True)
+    return jnp.einsum("...f,fd->...d", h, w_out) + b_out
+
+
+# ---------------------------------------------------------------- init utils
+
+def trunc_normal(key: jax.Array, shape, stddev: float, dtype=jnp.bfloat16):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * stddev).astype(dtype)
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, dtype=jnp.bfloat16):
+    return trunc_normal(key, (d_in, d_out), d_in ** -0.5, dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.bfloat16):
+    return trunc_normal(key, (vocab, d), 1.0, dtype)
+
+
+def split_keys(key: jax.Array, names):
+    ks = jax.random.split(key, len(names))
+    return dict(zip(names, ks))

@@ -1,0 +1,104 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin).
+
+The RG-LRU diagonal linear recurrence h_t = a_t * h_{t-1} + b_t is computed
+with `jax.lax.associative_scan` — the TPU-native parallel formulation (log-
+depth, MXU-free, VPU-bound) rather than a sequential loop.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import trunc_normal
+
+_MAX_SQRT = 8.0  # c constant from the Griffin paper (a = exp(-c * softplus(L) * r))
+
+
+def init_rglru_block(key, d_model: int, lru_width: int, conv_width: int,
+                     dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    w = lru_width
+    return {
+        "w_x": trunc_normal(ks[0], (d_model, w), d_model ** -0.5, dtype),
+        "w_gate": trunc_normal(ks[1], (d_model, w), d_model ** -0.5, dtype),
+        "conv_w": trunc_normal(ks[2], (conv_width, w), conv_width ** -0.5, dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        # RG-LRU params
+        "a_param": jnp.asarray(
+            jax.random.uniform(ks[3], (w,), jnp.float32, 0.9, 0.999)),
+        "w_input_gate": trunc_normal(ks[4], (w, w), w ** -0.5, dtype),
+        "w_rec_gate": trunc_normal(ks[5], (w, w), w ** -0.5, dtype),
+        "b_input_gate": jnp.zeros((w,), jnp.float32),
+        "b_rec_gate": jnp.zeros((w,), jnp.float32),
+        "w_out": trunc_normal(jax.random.fold_in(key, 7), (w, d_model),
+                              w ** -0.5, dtype),
+    }
+
+
+def _temporal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                   state: jnp.ndarray | None = None):
+    """Causal depthwise temporal conv. x: (B, T, W); w: (K, W).
+
+    Returns (y, new_state) where state is the trailing (K-1) inputs.
+    """
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, xp.shape[1] - (K - 1):]
+    return y + b, new_state
+
+
+def _rglru_coeffs(params, xb: jnp.ndarray):
+    """Per-step decay a_t and input b_t. xb: (B, T, W) float32."""
+    r = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", xb, params["w_rec_gate"].astype(jnp.float32))
+                       + params["b_rec_gate"])
+    i = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", xb, params["w_input_gate"].astype(jnp.float32))
+                       + params["b_input_gate"])
+    log_a = -_MAX_SQRT * r * jax.nn.softplus(params["a_param"])
+    a = jnp.exp(log_a)
+    gated_x = xb * i
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+    return a, b
+
+
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray | None = None):
+    """h_t = a_t h_{t-1} + b_t via associative scan over axis 1 (time)."""
+    if h0 is not None:
+        # fold initial state into the first input term
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(params, x: jnp.ndarray, *, conv_state=None, rec_state=None,
+                decode: bool = False):
+    """Full Griffin recurrent block. x: (B, T, d) -> (B, T, d).
+
+    decode=True: T==1, uses and returns (conv_state, rec_state).
+    """
+    xb = jnp.einsum("btd,dw->btw", x, params["w_x"])
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, params["w_gate"]),
+                       approximate=True)
+    xb, conv_state = _temporal_conv(xb, params["conv_w"], params["conv_b"],
+                                    conv_state)
+    a, b = _rglru_coeffs(params, xb.astype(jnp.float32))
+    if decode:
+        h0 = rec_state if rec_state is not None else jnp.zeros(
+            (x.shape[0], a.shape[-1]), jnp.float32)
+        h = a[:, 0] * h0 + b[:, 0]
+        rec_state = h
+        h = h[:, None]
+    else:
+        h = rglru_scan(a, b, rec_state)
+        rec_state = h[:, -1]
+    y = (h.astype(x.dtype) * gate)
+    out = jnp.einsum("btw,wd->btd", y, params["w_out"])
+    return out, conv_state, rec_state

@@ -1,0 +1,204 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Faithful to arXiv:2405.04517: exponential gating with max-state
+stabilization. Training/prefill runs a `lax.scan` over time (the recurrence
+is inherently sequential for sLSTM; mLSTM's chunkwise-parallel form is a
+possible later optimization, logged in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import trunc_normal, rms_norm
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray   # (B, H, D, D) matrix memory
+    n: jnp.ndarray   # (B, H, D) normalizer
+    m: jnp.ndarray   # (B, H) stabilizer
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray   # (B, H, D)
+    n: jnp.ndarray   # (B, H, D)
+    h: jnp.ndarray   # (B, H, D) recurrent output
+    m: jnp.ndarray   # (B, H)
+
+
+def init_mlstm_block(key, d_model: int, num_heads: int, proj_factor: float,
+                     dtype=jnp.bfloat16):
+    up = int(d_model * proj_factor)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": trunc_normal(ks[0], (d_model, 2 * up), d_model ** -0.5, dtype),
+        "w_q": trunc_normal(ks[1], (up, up), up ** -0.5, dtype),
+        "w_k": trunc_normal(ks[2], (up, up), up ** -0.5, dtype),
+        "w_v": trunc_normal(ks[3], (up, up), up ** -0.5, dtype),
+        "w_i": trunc_normal(ks[4], (up, num_heads), up ** -0.5, jnp.float32),
+        "w_f": trunc_normal(ks[5], (up, num_heads), up ** -0.5, jnp.float32),
+        "b_i": jnp.zeros((num_heads,), jnp.float32),
+        "b_f": jnp.full((num_heads,), 3.0, jnp.float32),  # forget-bias init
+        "out_norm": jnp.ones((up,), dtype),
+        "w_down": trunc_normal(ks[6], (up, d_model), up ** -0.5, dtype),
+    }
+
+
+def init_slstm_block(key, d_model: int, num_heads: int, proj_factor: float,
+                     dtype=jnp.bfloat16):
+    up = int(d_model * proj_factor)
+    ks = jax.random.split(key, 8)
+    hd = d_model // num_heads
+    return {
+        "w_z": trunc_normal(ks[0], (d_model, d_model), d_model ** -0.5, dtype),
+        "w_i": trunc_normal(ks[1], (d_model, num_heads), d_model ** -0.5, jnp.float32),
+        "w_f": trunc_normal(ks[2], (d_model, num_heads), d_model ** -0.5, jnp.float32),
+        "w_o": trunc_normal(ks[3], (d_model, d_model), d_model ** -0.5, dtype),
+        "r_z": trunc_normal(ks[4], (num_heads, hd, hd), hd ** -0.5, jnp.float32),
+        "b_i": jnp.zeros((num_heads,), jnp.float32),
+        "b_f": jnp.full((num_heads,), 3.0, jnp.float32),
+        "w_up": trunc_normal(ks[5], (d_model, int(d_model * proj_factor)),
+                             d_model ** -0.5, dtype),
+        "w_gate": trunc_normal(ks[6], (d_model, int(d_model * proj_factor)),
+                               d_model ** -0.5, dtype),
+        "w_down": trunc_normal(ks[7], (int(d_model * proj_factor), d_model),
+                               d_model ** -0.5, dtype),
+    }
+
+
+def _mlstm_project(params, num_heads: int, u: jnp.ndarray):
+    """All weight matmuls for the whole sequence, OUTSIDE the time scan.
+
+    The recurrence step is weight-free; with weights used inside the scan
+    the backward pass all-reduced per-timestep weight-gradient partials
+    (measured 201 MB x 24576 on xlstm-1.3b train_4k).
+    u: (B, T, up) -> q,k,v (B,T,H,D) + i,f (B,T,H) pre-activations.
+    """
+    B, T, up = u.shape
+    H = num_heads
+    D = up // H
+    q = jnp.einsum("btu,uv->btv", u, params["w_q"]).reshape(B, T, H, D)
+    k = jnp.einsum("btu,uv->btv", u, params["w_k"]).reshape(B, T, H, D) \
+        * (D ** -0.5)
+    v = jnp.einsum("btu,uv->btv", u, params["w_v"]).reshape(B, T, H, D)
+    u32 = u.astype(jnp.float32)
+    i_t = jnp.einsum("btu,uh->bth", u32, params["w_i"]) + params["b_i"]
+    f_t = jnp.einsum("btu,uh->bth", u32, params["w_f"]) + params["b_f"]
+    return q, k, v, i_t, f_t
+
+
+def _mlstm_step(num_heads: int, state: MLSTMState, qkvif):
+    """One weight-free mLSTM recurrence step on precomputed projections."""
+    q, k, v, i_t, f_t = qkvif        # (B,H,D) x3, (B,H) x2
+    log_f = -jax.nn.softplus(-f_t)                     # log sigmoid(f)
+    m_new = jnp.maximum(log_f + state.m, i_t)
+    i_s = jnp.exp(i_t - m_new)
+    f_s = jnp.exp(log_f + state.m - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c_new = f_s[..., None, None] * state.c + i_s[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", vf, kf)
+    n_new = f_s[..., None] * state.n + i_s[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhde,bhe->bhd", c_new, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, qf)),
+                      jnp.exp(-m_new))[..., None]
+    B, H, D = q.shape
+    h = (num / den).reshape(B, H * D)
+    return MLSTMState(c_new, n_new, m_new), h.astype(q.dtype)
+
+
+def mlstm_block(params, x: jnp.ndarray, num_heads: int, *,
+                state: MLSTMState | None = None, decode: bool = False):
+    """mLSTM block. x: (B, T, d) -> (B, T, d)."""
+    B, T, d = x.shape
+    u = jnp.einsum("btd,dk->btk", x, params["w_up"])
+    up = u.shape[-1] // 2
+    u, gate = u[..., :up], u[..., up:]
+    H = num_heads
+    D = up // H
+    if state is None:
+        state = MLSTMState(jnp.zeros((B, H, D, D), jnp.float32),
+                           jnp.zeros((B, H, D), jnp.float32),
+                           jnp.full((B, H), -1e30, jnp.float32))
+    q, k, v, i_t, f_t = _mlstm_project(params, H, u)
+    if decode:
+        state, h = _mlstm_step(H, state, (q[:, 0], k[:, 0], v[:, 0],
+                                          i_t[:, 0], f_t[:, 0]))
+        h = h[:, None]
+    else:
+        def step(s, qkvif):
+            return _mlstm_step(H, s, qkvif)
+        xs = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1),
+                          (q, k, v, i_t, f_t))
+        state, hs = jax.lax.scan(step, state, xs)
+        h = hs.transpose(1, 0, 2)
+    h = rms_norm(h, params["out_norm"])
+    y = h * jax.nn.silu(gate)
+    return jnp.einsum("btk,kd->btd", y, params["w_down"]), state
+
+
+def _slstm_project(params, num_heads: int, x: jnp.ndarray):
+    """Input-side weight matmuls for the whole sequence (outside the scan);
+    only the tiny block-diagonal recurrent r_z stays in the step."""
+    B, T, d = x.shape
+    H = num_heads
+    D = d // H
+    z_in = jnp.einsum("btd,de->bte", x, params["w_z"]).reshape(B, T, H, D)
+    x32 = x.astype(jnp.float32)
+    i_in = jnp.einsum("btd,dh->bth", x32, params["w_i"]) + params["b_i"]
+    f_in = jnp.einsum("btd,dh->bth", x32, params["w_f"]) + params["b_f"]
+    o_in = jax.nn.sigmoid(jnp.einsum(
+        "btd,de->bte", x32, params["w_o"].astype(jnp.float32))
+    ).reshape(B, T, H, D)
+    return z_in, i_in, f_in, o_in
+
+
+def _slstm_step(params, num_heads: int, state: SLSTMState, proj):
+    """One sLSTM recurrence step on precomputed input projections."""
+    z_in, i_t, f_t, o = proj           # (B,H,D), (B,H), (B,H), (B,H,D)
+    h_prev = state.h                   # (B, H, D)
+    z = z_in + jnp.einsum("bhd,hde->bhe", h_prev.astype(z_in.dtype),
+                          params["r_z"].astype(z_in.dtype))
+    z = jnp.tanh(z.astype(jnp.float32))
+    log_f = -jax.nn.softplus(-f_t)
+    m_new = jnp.maximum(log_f + state.m, i_t)
+    i_s = jnp.exp(i_t - m_new)
+    f_s = jnp.exp(log_f + state.m - m_new)
+    c_new = f_s[..., None] * state.c + i_s[..., None] * z
+    n_new = f_s[..., None] * state.n + i_s[..., None]
+    h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+    return SLSTMState(c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_block(params, x: jnp.ndarray, num_heads: int, *,
+                state: SLSTMState | None = None, decode: bool = False):
+    """sLSTM block + gated FFN. x: (B, T, d) -> (B, T, d)."""
+    B, T, d = x.shape
+    H = num_heads
+    D = d // H
+    if state is None:
+        z = jnp.zeros((B, H, D), jnp.float32)
+        state = SLSTMState(z, z, z, jnp.full((B, H), -1e30, jnp.float32))
+    z_in, i_in, f_in, o_in = _slstm_project(params, H, x)
+    if decode:
+        state, h = _slstm_step(params, H, state,
+                               (z_in[:, 0], i_in[:, 0], f_in[:, 0],
+                                o_in[:, 0]))
+        h = h[:, None]
+    else:
+        def step(s, proj):
+            return _slstm_step(params, H, s, proj)
+        xs = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1),
+                          (z_in, i_in, f_in, o_in))
+        state, hs = jax.lax.scan(step, state, xs)
+        h = hs.transpose(1, 0, 2, 3)
+    h = h.reshape(B, T, d).astype(x.dtype)
+    # post-recurrence gated FFN (xLSTM block structure)
+    u = jax.nn.gelu(jnp.einsum("btd,df->btf", h, params["w_up"]), approximate=True)
+    g = jnp.einsum("btd,df->btf", h, params["w_gate"])
+    out = jnp.einsum("btf,fd->btd", u * jax.nn.sigmoid(g.astype(jnp.float32)).astype(g.dtype),
+                     params["w_down"])
+    return out, state

@@ -1,0 +1,82 @@
+"""Continuous batching scheduler (paper §4.1: "continuous batching enabled").
+
+Requests arrive over (simulated) time, are prefillled on admission, join the
+decode batch in a free slot, and leave at completion — freeing the slot for
+the next waiting request. The scheduler is engine-agnostic: it operates on a
+`step_fn(batch_tokens) -> next_tokens` plus admission callbacks, so both the
+real engine and the latency simulator reuse it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.runtime.request import Request
+
+
+@dataclass
+class BatcherStats:
+    admitted: int = 0
+    completed: int = 0
+    decode_iterations: int = 0
+    occupancy_sum: float = 0.0
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self.occupancy_sum / max(self.decode_iterations, 1)
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching over a fixed max batch size."""
+
+    def __init__(self, max_batch: int):
+        self.max_batch = max_batch
+        self.waiting: List[Request] = []
+        self.active: Dict[int, Request] = {}   # slot -> request
+        self.free_slots = list(range(max_batch))
+        self.stats = BatcherStats()
+
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def admit(self, on_admit: Optional[Callable[[Request, int], None]] = None
+              ) -> List[Request]:
+        """Move waiting requests into free slots (prefill happens here)."""
+        admitted = []
+        while self.waiting and self.free_slots:
+            req = self.waiting.pop(0)
+            slot = self.free_slots.pop(0)
+            req.slot = slot
+            self.active[slot] = req
+            if on_admit:
+                on_admit(req, slot)
+            self.stats.admitted += 1
+            admitted.append(req)
+        return admitted
+
+    def step(self, next_tokens: Dict[int, int]) -> List[Request]:
+        """Record one decode iteration's sampled tokens; returns finished."""
+        finished = []
+        self.stats.decode_iterations += 1
+        self.stats.occupancy_sum += len(self.active) / self.max_batch
+        for slot, tok in next_tokens.items():
+            req = self.active.get(slot)
+            if req is None:
+                continue
+            req.output.append(int(tok))
+            if req.done:
+                finished.append(req)
+                del self.active[slot]
+                self.free_slots.append(slot)
+                self.free_slots.sort()
+                self.stats.completed += 1
+        return finished
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.active)
+
+    def active_slots(self) -> List[int]:
+        return sorted(self.active)

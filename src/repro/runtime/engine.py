@@ -1,0 +1,304 @@
+"""Inference engine: real JAX execution with routing-trace collection.
+
+The engine runs reduced-config MoE models on the host device, capturing per
+MoE layer: the router's per-token expert assignments, pre-gate logits, and
+pooled hidden states. These *real* routing traces drive (a) predictor
+training (`core.trace`/`core.predictor`) and (b) the latency simulator
+(`simulator.events`), which replays them under baseline/ExpertFlow policies
+with platform timing constants.
+
+It also provides `SlotBufferEngine`: the MoE forward computed through the
+bounded device slot buffer (`core.expert_buffer` + `models.moe.moe_slotbuf`)
+with the host-side TwoLevelLRU controlling swaps — the integration test that
+the TPU-adapted mechanism is numerically exact versus the fully-resident
+model whenever the runtime keeps the working set resident.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.cache import TwoLevelLRU
+from repro.core.expert_buffer import SlotTable, make_buffer, swap_in
+from repro.core.trace import Sample, TraceLog
+from repro.models import moe as moe_mod
+from repro.models.layers import rms_norm, swiglu
+from repro.models.transformer import (LayerSpec, Model, layer_decode,
+                                      layer_forward)
+from repro.runtime.sampler import sample
+from repro.simulator.events import RoutingTrace, StepTrace
+
+
+def _all_specs(model: Model) -> List[LayerSpec]:
+    specs = list(model.prefix)
+    for _ in range(model.num_units):
+        specs.extend(model.unit)
+    specs.extend(model.tail)
+    return specs
+
+
+def _layer_params(model: Model, params, i: int):
+    """Per-layer params for absolute depth i (unstacks unit params)."""
+    np_ = len(model.prefix)
+    nu = len(model.unit)
+    if i < np_:
+        return params["prefix"][i]
+    j = i - np_
+    if j < model.num_units * nu:
+        u, k = divmod(j, nu)
+        return jax.tree.map(lambda x: x[u], params["unit"][k])
+    return params["tail"][j - model.num_units * nu]
+
+
+class Engine:
+    """Single-model inference engine with trace collection."""
+
+    def __init__(self, cfg: ModelConfig, key: Optional[jax.Array] = None,
+                 max_seq: int = 512):
+        assert cfg.moe is not None, "Engine requires an MoE config"
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.max_seq = max_seq
+        key = key if key is not None else jax.random.PRNGKey(0)
+        self.params = self.model.init(key)
+        self.specs = _all_specs(self.model)
+        self.moe_layer_ids = [i for i, s in enumerate(self.specs) if s.is_moe]
+        self._prefill = jax.jit(self._prefill_collect,
+                                static_argnames=("max_seq",))
+        self._decode = jax.jit(self._decode_collect)
+
+    # -- router weights for pre-gating ----------------------------------------
+    def routers(self) -> List[np.ndarray]:
+        out = []
+        for i in self.moe_layer_ids:
+            p = _layer_params(self.model, self.params, i)
+            out.append(np.asarray(p["moe"]["router"], np.float32))
+        return out
+
+    # -- jitted bodies ---------------------------------------------------------
+    def _prefill_collect(self, params, tokens, max_seq: int):
+        cfg = self.cfg
+        model = self.model
+        x = model.embed(params, tokens)
+        B, T = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+        from repro.models.transformer import layer_prefill
+
+        routers, hiddens, caches = [], [], []
+        for i, spec in enumerate(self.specs):
+            p = _layer_params(model, params, i)
+            sink: list = []
+            x, c = layer_prefill(p, cfg, spec, x, positions, max_seq,
+                                 router_sink=sink)
+            caches.append(c)
+            if spec.is_moe:
+                r = sink[0]
+                routers.append((r.expert_ids, r.probs))
+                hiddens.append(jnp.mean(x.astype(jnp.float32), axis=(0, 1)))
+        logits = model.logits(params, x[:, -1])
+        return logits, caches, routers, hiddens
+
+    def _decode_collect(self, params, token, caches, cache_len):
+        cfg = self.cfg
+        model = self.model
+        pos = jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1, 1),
+                               (token.shape[0], 1))
+        x = model.embed(params, token[:, None], positions=pos)
+        routers, hiddens = [], []
+        new_caches = []
+        for i, spec in enumerate(self.specs):
+            p = _layer_params(model, params, i)
+            sink: list = []
+            x, c = layer_decode_collect(p, cfg, spec, x, caches[i], cache_len,
+                                        sink)
+            new_caches.append(c)
+            if spec.is_moe:
+                r = sink[0]
+                routers.append((r.expert_ids, r.probs))
+                hiddens.append(jnp.mean(x.astype(jnp.float32), axis=(0, 1)))
+        logits = model.logits(params, x[:, 0])
+        return logits, new_caches, routers, hiddens
+
+    # -- public API ---------------------------------------------------------
+    def generate(self, tokens: np.ndarray, n_steps: int,
+                 temperature: float = 0.0, collect: bool = True,
+                 fixed_s_for_log: int = 2,
+                 key: Optional[jax.Array] = None
+                 ) -> Tuple[np.ndarray, RoutingTrace, TraceLog]:
+        """tokens: (B, T). Returns (generated (B, n_steps), trace, log)."""
+        cfg = self.cfg
+        m = cfg.moe
+        tokens = jnp.asarray(tokens, jnp.int32)
+        B, T = tokens.shape
+        key = key if key is not None else jax.random.PRNGKey(17)
+        logits, caches, routers, hiddens = self._prefill(
+            self.params, tokens, max_seq=self.max_seq)
+
+        trace = RoutingTrace(model=cfg.name,
+                             num_moe_layers=len(self.moe_layer_ids),
+                             num_experts=m.num_experts, top_k=m.top_k,
+                             routers=self.routers())
+        log = TraceLog()
+        token_list = np.asarray(tokens).reshape(-1)
+        embeds = np.asarray(
+            self.model.embed(self.params, tokens).astype(jnp.float32)
+        ).reshape(B * T, -1)
+
+        def record_step(step_idx, routers_out, hiddens_out, embeddings=None):
+            assigns = [np.asarray(r[0]) for r in routers_out]
+            probs = [np.asarray(r[1]) for r in routers_out]
+            hp = np.stack([np.asarray(h) for h in hiddens_out])
+            trace.steps.append(StepTrace(step_idx, token_list, assigns, hp,
+                                         embeddings))
+            if collect:
+                for li, a in enumerate(assigns):
+                    actual = sorted({int(e) for e in a.reshape(-1)})
+                    log.add(token_ids=tuple(int(t) for t in token_list[:64]),
+                            layer_idx=li,
+                            predicted_experts=(),
+                            actual_experts=tuple(actual),
+                            step_size=fixed_s_for_log,
+                            request_id=step_idx,
+                            pregate_probs=tuple(
+                                float(p) for p in probs[li].mean(0)[:64]))
+
+        record_step(0, routers, hiddens, embeds)
+        out = []
+        cache_len = jnp.asarray(T, jnp.int32)
+        tok = sample(logits, key, temperature)
+        out.append(np.asarray(tok))
+        for step in range(1, n_steps):
+            logits, caches, routers, hiddens = self._decode(
+                self.params, tok, caches, cache_len)
+            cache_len = cache_len + 1
+            key = jax.random.fold_in(key, step)
+            tok = sample(logits, key, temperature)
+            out.append(np.asarray(tok))
+            record_step(step, routers, hiddens)
+        return np.stack(out, axis=1), trace, log
+
+
+def layer_decode_collect(p, cfg, spec, x, cache, cache_len, sink):
+    """layer_decode variant that captures the MoE router output."""
+    if not spec.is_moe:
+        return layer_decode(p, cfg, spec, x, cache, cache_len)
+    # replicate layer_decode but keep the RouterOutput
+    from repro.models.transformer import _zc
+    B = x.shape[0]
+    x, new_cache = _attn_only_decode(p, cfg, spec, x, cache, cache_len)
+    h2 = rms_norm(x, p["ffn_norm"], cfg.norm_eps, zero_centered=_zc(cfg))
+    flat = h2.reshape(B, -1)
+    out, r = moe_mod.moe_grouped(p["moe"], flat, cfg.moe,
+                                 capacity=B * cfg.moe.top_k)
+    sink.append(r)
+    ff = out.reshape(B, 1, -1)
+    if "post_ffn_norm" in p:
+        ff = rms_norm(ff, p["post_ffn_norm"], cfg.norm_eps, zero_centered=_zc(cfg))
+    return x + ff, new_cache
+
+
+def _attn_only_decode(p, cfg, spec, x, cache, cache_len):
+    """The attention/mixing part of layer_decode (FFN stripped)."""
+    stripped = {k: v for k, v in p.items() if k not in ("ffn_norm", "moe",
+                                                        "ffn",
+                                                        "post_ffn_norm")}
+    spec_no_ffn = LayerSpec(spec.kind, spec.window, False, spec.layer_idx)
+    return layer_decode(stripped, cfg, spec_no_ffn, x, cache, cache_len)
+
+
+# ---------------------------------------------------------------------------
+# Slot-buffer execution (device-side cache integration)
+# ---------------------------------------------------------------------------
+
+class SlotBufferEngine:
+    """MoE forward through the bounded expert slot buffer.
+
+    Host side: TwoLevelLRU + SlotTable decide residency; device side: slots
+    updated via dynamic_update_slice, MoE computed with `moe_slotbuf`.
+    With `ensure_resident=True` the runtime swaps in all required experts
+    before compute (recording would-be stalls) — outputs are then bit-exact
+    versus the fully-resident model.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, model: Model,
+                 n_slots_per_layer: int):
+        assert cfg.moe is not None
+        self.cfg = cfg
+        self.model = model
+        self.params = params
+        self.specs = _all_specs(model)
+        self.moe_layer_ids = [i for i, s in enumerate(self.specs) if s.is_moe]
+        L, E = len(self.moe_layer_ids), cfg.moe.num_experts
+        self.n_slots = n_slots_per_layer * L
+        self.table = SlotTable(L, E, self.n_slots)
+        self.cache = TwoLevelLRU(self.n_slots)
+        self.buffer = make_buffer(cfg, self.n_slots, jnp.bfloat16)
+        self.swap_count = 0
+        self.would_stall = 0
+
+    def _expert_weights(self, li: int, e: int):
+        p = _layer_params(self.model, self.params, self.moe_layer_ids[li])
+        return (p["moe"]["w_gate"][e], p["moe"]["w_up"][e],
+                p["moe"]["w_down"][e])
+
+    def ensure_resident(self, li: int, experts) -> int:
+        """Swap in missing experts for MoE layer li. Returns #swaps."""
+        swaps = 0
+        for e in experts:
+            key = (li, int(e))
+            if self.cache.touch(key):
+                continue
+            self.would_stall += 1
+            victim = self.cache.insert(key)
+            if victim is not None:
+                self.table.release(*victim)
+            slot = self.table.assign(li, int(e))
+            wg, wu, wd = self._expert_weights(li, int(e))
+            self.buffer = swap_in(self.buffer, slot, wg, wu, wd)
+            swaps += 1
+        self.swap_count += swaps
+        return swaps
+
+    def forward(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        """Full forward with slot-buffer MoE. tokens: (B, T) -> (B, T, d)."""
+        cfg = self.cfg
+        model = self.model
+        x = model.embed(self.params, tokens)
+        B, T = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+        li = 0
+        from repro.models.transformer import _zc
+        for i, spec in enumerate(self.specs):
+            p = _layer_params(model, self.params, i)
+            if not spec.is_moe:
+                x = layer_forward(p, cfg, spec, x, positions)
+                continue
+            # attention part
+            stripped = {k: v for k, v in p.items()
+                        if k not in ("ffn_norm", "moe", "ffn", "post_ffn_norm")}
+            spec_nf = LayerSpec(spec.kind, spec.window, False, spec.layer_idx)
+            x = layer_forward(stripped, cfg, spec_nf, x, positions)
+            # route on host to learn required experts, then ensure residency
+            h2 = rms_norm(x, p["ffn_norm"], cfg.norm_eps, zero_centered=_zc(cfg))
+            flat = h2.reshape(B * T, -1)
+            r = moe_mod.route(p["moe"]["router"], flat, cfg.moe.top_k,
+                              cfg.moe.router_norm_topk)
+            needed = sorted({int(e) for e in np.asarray(r.expert_ids).reshape(-1)})
+            self.ensure_resident(li, needed)
+            slot_map = jnp.asarray(self.table.layer_slot_map(li))
+            out, _ = moe_mod.moe_slotbuf(
+                p["moe"], self.buffer, slot_map, flat, cfg.moe,
+                capacity=B * T * cfg.moe.top_k)
+            ff = out.reshape(B, T, -1)
+            if "post_ffn_norm" in p:
+                ff = rms_norm(ff, p["post_ffn_norm"], cfg.norm_eps,
+                              zero_centered=_zc(cfg))
+            x = x + ff
+            li += 1
+        return x

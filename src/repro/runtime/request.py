@@ -1,0 +1,32 @@
+"""Request objects for the serving runtime."""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+_ids = itertools.count()
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray                  # (T,) int32 token ids
+    max_new_tokens: int = 16
+    temperature: float = 0.0            # 0 = greedy
+    request_id: int = field(default_factory=lambda: next(_ids))
+    arrival_s: float = 0.0
+    # filled by the engine
+    output: List[int] = field(default_factory=list)
+    prefill_done_s: float = -1.0
+    finish_s: float = -1.0
+    slot: int = -1
+
+    @property
+    def done(self) -> bool:
+        return len(self.output) >= self.max_new_tokens
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))

@@ -1,0 +1,229 @@
+"""Discrete-event MoE inference simulator.
+
+Replays *real* routing traces (collected by `repro.runtime.engine` from real
+JAX model execution) through a timing model of one accelerator + one
+host->device transfer link, under a pluggable `Policy`
+(baseline / pre-gate / ProMoE-like / ExpertFlow). Produces the
+waiting-latency / cache-miss-latency metrics of the paper's §4.
+
+Timeline model per decode step, per MoE layer l:
+  1. transfers that completed before `now` land in the cache;
+  2. the layer's *actual* expert set (from the trace) is checked against the
+     cache: resident -> hit; in-flight -> waiting stall; absent -> demand
+     load at miss priority (cache-miss stall);
+  3. with cache-aware routing, tokens whose experts are resident compute
+     first and transfers overlap; otherwise the whole layer blocks;
+  4. the policy issues prefetches for layer l+S (predictions from pre-gate /
+     forest over current hidden states);
+  5. counters feed the adaptive-S controller; tier assignments update.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.cache import TwoLevelLRU
+from repro.core.cache_aware import (overlap_schedule, sequential_schedule,
+                                    split_by_residency)
+from repro.core.coordinator import Policy, PredictionSource
+from repro.core.metrics import RunReport, StepMetrics
+from repro.core.predictor import ForestPredictor
+from repro.core.prefetcher import Prefetcher, TransferLink
+from repro.core.step_size import StepSizeController, token_diversity
+from repro.simulator.hardware import HardwareSpec
+
+
+@dataclass
+class StepTrace:
+    """Routing observations for one decode step (from real execution)."""
+    step_idx: int
+    token_ids: np.ndarray          # (T,) int — context ids (predictor feature)
+    assignments: List[np.ndarray]  # per MoE layer: (T, k) expert ids
+    hidden_pooled: np.ndarray      # (L_moe, d) mean hidden state per MoE layer
+    embeddings: Optional[np.ndarray] = None  # (T, d) token embeds (diversity)
+
+
+@dataclass
+class RoutingTrace:
+    model: str
+    num_moe_layers: int
+    num_experts: int               # per layer
+    top_k: int
+    routers: List[np.ndarray]      # per MoE layer (d, E)
+    steps: List[StepTrace] = field(default_factory=list)
+    bytes_per_param: float = 2.0
+
+
+@dataclass
+class SimSpec:
+    """Timing constants for the simulated platform/model pair."""
+    expert_bytes: float
+    layer_time_s: float            # per-layer compute time T_l
+    capacity_experts: int          # device cache size in experts
+
+
+def _distinct(assign: np.ndarray) -> List[int]:
+    return sorted({int(e) for e in np.asarray(assign).reshape(-1)})
+
+
+def simulate(trace: RoutingTrace, spec: SimSpec, hw: HardwareSpec,
+             policy: Policy, forest: Optional[ForestPredictor] = None,
+             max_steps: Optional[int] = None) -> RunReport:
+    L, M = trace.num_moe_layers, trace.num_experts
+    link = TransferLink(hw.host_bw)
+    pf = Prefetcher(link, spec.expert_bytes,
+                    blocking_swap_out=policy.blocking_swap_out)
+    cache = TwoLevelLRU(spec.capacity_experts)
+    controller = StepSizeController(cfg=policy.step_cfg, s=policy.fixed_s,
+                                    bandwidth_est=hw.host_bw,
+                                    layer_time_est=spec.layer_time_s)
+    source = PredictionSource(policy, trace.routers, forest, M, trace.top_k)
+    report = RunReport(policy=policy.name, platform=hw.name, model=trace.model)
+
+    prefetched_unused: Set[Tuple[int, int]] = set()
+    predicted_sets: Dict[int, Set[Tuple[int, int]]] = {}
+    predicted_next: Dict[int, Set[Tuple[int, int]]] = {}
+    now = 0.0
+    prev_step: Optional[StepTrace] = None
+
+    steps = trace.steps[:max_steps] if max_steps else trace.steps
+    for si, st in enumerate(steps):
+        next_st = steps[si + 1] if si + 1 < len(steps) else None
+        predicted_sets, predicted_next = predicted_next, {}
+        sm = StepMetrics(step=st.step_idx)
+        history = np.zeros((L, M), np.float64)
+        if policy.adaptive_s and st.step_idx == 0 and st.embeddings is not None:
+            # initial S from the formula (§3.2.1) using layer-0 pre-gate
+            pg0 = source.pregate.probs(st.hidden_pooled[0][None, :], 0)
+            controller.initialize(pg0, spec.expert_bytes,
+                                  token_diversity(st.embeddings))
+        s = controller.s if policy.adaptive_s else policy.fixed_s
+        sm.step_size = s
+
+        # step-begin prefetch for early layers not already covered by the
+        # previous step's wraparound predictions (one decode step stale)
+        if policy.prefetch and prev_step is not None:
+            for tgt in range(min(s, L)):
+                if tgt in predicted_sets:
+                    continue
+                hid = prev_step.hidden_pooled[tgt][None, :]
+                pred = source.predict(
+                    hidden=hid, target_layer_pos=tgt,
+                    token_ids=st.token_ids, s=s, history=history,
+                    actual=_distinct(st.assignments[tgt]))
+                keys = {(tgt, e) for e in pred}
+                predicted_sets[tgt] = keys
+                for key in keys:
+                    if key not in cache:
+                        pf.prefetch(key, now)
+                        prefetched_unused.add(key)
+
+        for li in range(L):
+            # land arrivals; insert into cache with tiering
+            for key in pf.advance(now):
+                _insert(cache, key, policy, pf, prefetched_unused,
+                        controller, sm)
+
+            actual = _distinct(st.assignments[li])
+            keys = [(li, e) for e in actual]
+            predicted = predicted_sets.get(li, set())
+
+            missing_inflight, missing_cold = [], []
+            for key in keys:
+                if cache.touch(key, high=policy.two_level_lru):
+                    sm.n_hits += 1
+                    prefetched_unused.discard(key)
+                else:
+                    sm.n_misses += 1
+                    if key in pf.issued:
+                        missing_inflight.append(key)
+                    else:
+                        missing_cold.append(key)
+
+            # resolve misses: cold demands go at top priority (§3.4)
+            ready_t = now
+            for key in missing_cold + missing_inflight:
+                t_done = pf.demand(key, now)
+                ready_t = max(ready_t, t_done)
+                _insert(cache, key, policy, pf, prefetched_unused,
+                        controller, sm)
+            missing = set(missing_cold) | set(missing_inflight)
+
+            # schedule layer compute
+            if policy.cache_aware and missing:
+                resident_set = {e for (l2, e) in keys
+                                if (l2, e) not in missing}
+                split = split_by_residency(st.assignments[li], resident_set)
+                finish, exposed = overlap_schedule(
+                    split, spec.layer_time_s, ready_t, now)
+            else:
+                finish, exposed = sequential_schedule(
+                    spec.layer_time_s, ready_t if missing else now, now)
+            # attribute exposed stall: in-flight -> waiting, cold -> miss
+            if exposed > 0:
+                if missing_cold:
+                    sm.cache_miss_s += exposed
+                    controller.record_stall()
+                else:
+                    sm.waiting_s += exposed
+                    controller.record_stall()
+            sm.compute_s += finish - now - exposed
+            now = finish
+            controller.update_layer_time(spec.layer_time_s)
+
+            # issue prefetch for layer li + s (prediction from current
+            # hidden); past the last layer it wraps into the next decode
+            # step's early layers (§3.3.1 early-layer reuse)
+            if policy.prefetch:
+                tgt = li + s
+                wrap = tgt >= L
+                tgt_mod = tgt - L if wrap else tgt
+                tgt_step = next_st if wrap else st
+                if tgt_step is not None and tgt_mod < L:
+                    pred = source.predict(
+                        hidden=st.hidden_pooled[li][None, :],
+                        target_layer_pos=tgt_mod,
+                        token_ids=tgt_step.token_ids, s=s, history=history,
+                        actual=_distinct(tgt_step.assignments[tgt_mod]))
+                    pkeys = {(tgt_mod, e) for e in pred}
+                    (predicted_next if wrap else predicted_sets)[tgt_mod] = pkeys
+                    if policy.two_level_lru:
+                        outstanding = set()
+                        for v in predicted_sets.values():
+                            outstanding |= v
+                        for v in predicted_next.values():
+                            outstanding |= v
+                        cache.retier(outstanding,
+                                     range(max(0, li - 2), li + 1), li)
+                    if policy.protect_early_layers:
+                        cache.protect_early_layers(s)
+                    for key in pkeys:
+                        if key not in cache:
+                            pf.prefetch(key, now)
+                            prefetched_unused.add(key)
+
+            # history update (forest feature)
+            for e in actual:
+                history[li, e] = 1.0
+
+        sm.n_prefetched = pf.n_prefetches
+        report.add(sm)
+        prev_step = st
+    return report
+
+
+def _insert(cache: TwoLevelLRU, key, policy: Policy, pf: Prefetcher,
+            prefetched_unused: Set, controller: StepSizeController,
+            sm: StepMetrics) -> None:
+    if key in cache:
+        return
+    victim = cache.insert(key, high=not policy.two_level_lru)
+    if victim is not None:
+        pf.forget(victim)
+        pf.writeback(0.0)
+        if victim in prefetched_unused:
+            prefetched_unused.discard(victim)
+            sm.n_overfetched += 1
+            controller.record_overfetch()

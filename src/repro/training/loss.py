@@ -1,0 +1,51 @@
+"""Chunked cross-entropy: the (tokens, vocab) logits matrix is never
+materialized — a scan over token chunks computes logsumexp + NLL per chunk
+(256k vocab x 1M tokens would otherwise need ~33 GB/device at bf16)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import softcap as softcap_fn
+
+
+def chunked_cross_entropy(h: jnp.ndarray, w: jnp.ndarray,
+                          labels: jnp.ndarray, *, chunk: int = 2048,
+                          logit_softcap: float = 0.0,
+                          ignore_index: int = -100) -> jnp.ndarray:
+    """h: (B, T, d) final hidden (post norm); w: (d, V); labels: (B, T).
+    Returns mean NLL over non-ignored positions."""
+    B, T, d = h.shape
+    V = w.shape[-1]
+    x = h.reshape(B * T, d)
+    y = labels.reshape(B * T)
+    N = x.shape[0]
+    chunk = min(chunk, N)
+    pad = (-N) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        y = jnp.pad(y, (0, pad), constant_values=ignore_index)
+    n_chunks = x.shape[0] // chunk
+    xc = x.reshape(n_chunks, chunk, d)
+    yc = y.reshape(n_chunks, chunk)
+
+    def body(carry, xy):
+        total, count = carry
+        xb, yb = xy
+        logits = jnp.einsum("td,dv->tv", xb, w).astype(jnp.float32)
+        if logit_softcap > 0:
+            logits = softcap_fn(logits, logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(yb, 0)[:, None], axis=-1)[:, 0]
+        nll = lse - picked
+        mask = (yb != ignore_index).astype(jnp.float32)
+        return (total + jnp.sum(nll * mask), count + jnp.sum(mask)), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, yc))
+    return total / jnp.maximum(count, 1.0)

@@ -1,0 +1,236 @@
+"""ExpertFlow core unit tests: step-size controller, two-level LRU,
+predictor/forest, trace pipeline."""
+import numpy as np
+import pytest
+
+from repro.core.cache import TwoLevelLRU
+from repro.core.forest import DecisionTreeRegressor, RandomForestRegressor
+from repro.core.predictor import (ForestPredictor, PreGate, fit_exp_decay,
+                                  recall_accuracy, topk_set)
+from repro.core.step_size import (StepSizeConfig, StepSizeController,
+                                  expected_active_experts, initial_step_size,
+                                  token_diversity)
+from repro.core.trace import FeatureSpec, Sample, TraceLog, build_features
+
+
+# ---------------------------------------------------------------- step size
+def test_step_size_formula():
+    # S = N_e * E_s / (C_s * T_l): 8 experts x 16MB / (64GB/s * 2ms) = 1
+    s = initial_step_size(8, 16e6, 64e9, 2e-3)
+    assert s == 1
+    s = initial_step_size(16, 64e6, 32e9, 2e-3)   # 1024MB / 64MB = 16 -> clamp
+    assert s == StepSizeConfig().s_max
+
+
+def test_expected_active_experts_threshold():
+    probs = np.array([0.5, 0.3, 0.1, 0.05, 0.05])
+    assert expected_active_experts(probs, 0.7) == 2
+    assert expected_active_experts(probs, 0.95) == 4
+    uniform = np.ones(10) / 10
+    assert expected_active_experts(uniform, 0.7) == 7
+
+
+def test_controller_stall_overfetch_feedback():
+    c = StepSizeController(cfg=StepSizeConfig(stall_threshold=2,
+                                              overfetch_threshold=2), s=3)
+    c.record_stall()
+    assert c.s == 3
+    c.record_stall()           # threshold hit -> S += 1
+    assert c.s == 4
+    c.record_overfetch(); c.record_overfetch()
+    assert c.s == 3
+    # bounds respected
+    for _ in range(40):
+        c.record_stall(2)
+    assert c.s == c.cfg.s_max
+    for _ in range(80):
+        c.record_overfetch(2)
+    assert c.s == c.cfg.s_min
+
+
+def test_bandwidth_ema_updates():
+    c = StepSizeController()
+    b0 = c.bandwidth_est
+    c.update_bandwidth(64e9, 1.0)   # observed 64 GB/s
+    assert c.bandwidth_est != b0
+    for _ in range(100):
+        c.update_bandwidth(64e9, 1.0)
+    assert abs(c.bandwidth_est - 64e9) / 64e9 < 0.01
+
+
+def test_token_diversity_orders_batches():
+    rng = np.random.default_rng(0)
+    tight = rng.standard_normal((16, 8)) * 0.01
+    spread = rng.standard_normal((16, 8)) * 10.0
+    assert token_diversity(spread) > token_diversity(tight)
+
+
+# ---------------------------------------------------------------- cache
+def test_two_level_lru_evicts_low_first():
+    c = TwoLevelLRU(3)
+    c.insert((0, 1), high=True)
+    c.insert((0, 2), high=False)
+    c.insert((0, 3), high=True)
+    v = c.insert((0, 4), high=True)   # evict -> must come from low
+    assert v == (0, 2)
+    assert (0, 1) in c and (0, 3) in c and (0, 4) in c
+
+
+def test_lru_order_within_tier():
+    c = TwoLevelLRU(2)
+    c.insert((0, 1), high=False)
+    c.insert((0, 2), high=False)
+    c.touch((0, 1), high=False)       # 1 becomes MRU
+    v = c.insert((0, 3), high=False)
+    assert v == (0, 2)
+
+
+def test_pinned_never_evicted():
+    c = TwoLevelLRU(2)
+    c.insert((0, 1), high=False)
+    c.pin((0, 1))
+    c.insert((0, 2), high=False)
+    v = c.insert((0, 3), high=False)
+    assert v == (0, 2)
+    c.unpin((0, 1))
+
+
+def test_retier_moves_predicted_up():
+    c = TwoLevelLRU(4)
+    c.insert((5, 1), high=False)
+    c.insert((6, 2), high=False)
+    c.retier(predicted={(5, 1)}, recent_layers=[], current_layer=7)
+    assert (5, 1) in c.high and (6, 2) in c.low
+
+
+def test_protect_early_layers():
+    c = TwoLevelLRU(4)
+    c.insert((0, 1), high=False)
+    c.insert((9, 1), high=False)
+    c.protect_early_layers(2)
+    assert (0, 1) in c.high and (9, 1) in c.low
+
+
+# ---------------------------------------------------------------- forest
+def test_tree_fits_simple_split():
+    X = np.array([[0.0], [1.0], [2.0], [3.0]] * 10)
+    y = (X[:, 0] >= 2).astype(float)
+    t = DecisionTreeRegressor(max_depth=3, min_samples_leaf=1,
+                              max_features=None)
+    t.fit(X, y)
+    pred = t.predict(np.array([[0.5], [2.5]]))
+    assert pred[0] < 0.1 and pred[1] > 0.9
+
+
+def test_forest_multioutput_regression():
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((300, 6))
+    Y = np.stack([(X[:, 0] > 0).astype(float),
+                  (X[:, 1] > 0.5).astype(float)], axis=1)
+    f = RandomForestRegressor(n_estimators=10, max_depth=8, seed=1)
+    f.fit(X, Y)
+    assert f.score_mse(X, Y) < 0.1
+
+
+def test_forest_beats_constant_predictor():
+    rng = np.random.default_rng(3)
+    X = rng.standard_normal((400, 10))
+    y = X[:, 0] * 2 + np.sin(X[:, 1]) + 0.1 * rng.standard_normal(400)
+    f = RandomForestRegressor(n_estimators=8, max_depth=10, seed=2)
+    f.fit(X, y)
+    const_mse = float(np.mean((y - y.mean()) ** 2))
+    assert f.score_mse(X, y) < 0.5 * const_mse
+
+
+# ---------------------------------------------------------------- trace/predictor
+def _toy_log(L=3, M=8, n_req=12, seed=0):
+    """Topic-structured routing: tokens come from a topic's vocab block and
+    the topic determines every layer's experts (the learnable structure real
+    trained routers exhibit)."""
+    rng = np.random.default_rng(seed)
+    log = TraceLog()
+    n_topics = 4
+    block = 64 // n_topics
+    for r in range(n_req):
+        topic = int(rng.integers(n_topics))
+        toks = tuple(int(topic * block + t)
+                     for t in rng.integers(0, block, 6))
+        for l in range(L):
+            e0 = (topic * 2 + l) % M
+            log.add(token_ids=toks, layer_idx=l,
+                    predicted_experts=(),
+                    actual_experts=(e0, (e0 + 1) % M),
+                    step_size=2, request_id=r)
+    return log
+
+
+def test_trace_roundtrip(tmp_path):
+    log = _toy_log()
+    p = tmp_path / "trace.jsonl"
+    log.save(str(p))
+    log2 = TraceLog.load(str(p))
+    assert len(log2.samples) == len(log.samples)
+    assert log2.samples[0] == log.samples[0]
+
+
+def test_trace_groups_by_tokens_and_s():
+    log = _toy_log(n_req=4)
+    groups = log.groups()
+    assert all(len(v) == 3 for v in groups.values())
+
+
+def test_feature_construction_dims():
+    log = _toy_log(L=3, M=8)
+    spec = FeatureSpec(vocab_size=64, embed_dim=4, num_layers=3,
+                       num_experts=8)
+    X, Y = build_features(log, spec)
+    assert X.shape[1] == spec.feature_dim == 4 + 2 + 24
+    assert Y.shape[1] == 8
+    assert X.shape[0] == Y.shape[0] == len(log.samples)
+
+
+def test_forest_predictor_learns_deterministic_routing():
+    log = _toy_log(L=3, M=8, n_req=30)
+    spec = FeatureSpec(vocab_size=64, embed_dim=8, num_layers=3,
+                       num_experts=8)
+    pred = ForestPredictor(spec)
+    pred.fit(log)
+    # predict on training requests with runtime-maintained history:
+    # top-2 should recover the actual experts
+    hits, total = 0, 0
+    hist = {}
+    for s in log.samples:
+        h = hist.setdefault(s.token_ids, np.zeros((3, 8)))
+        out = pred.predict(s.token_ids, s.layer_idx, s.step_size, h, top_k=2,
+                           use_cache=False)
+        hits += len(set(out) & set(s.actual_experts))
+        total += len(s.actual_experts)
+        for e in s.actual_experts:
+            h[s.layer_idx, e] = 1.0
+    assert hits / total > 0.8, hits / total
+
+
+def test_prediction_cache_hit():
+    log = _toy_log()
+    spec = FeatureSpec(vocab_size=64, embed_dim=4, num_layers=3, num_experts=8)
+    pred = ForestPredictor(spec)
+    pred.fit(log)
+    h = np.zeros((3, 8))
+    a = pred.predict((1, 2, 3), 1, 2, h, top_k=2)
+    assert pred._key((1, 2, 3), 1, 2) in pred.cache
+    b = pred.predict((1, 2, 3), 1, 2, h, top_k=2)
+    assert a == b
+
+
+def test_fit_exp_decay_recovers_params():
+    t = np.arange(1, 12, dtype=float)
+    acc = 0.4 * np.exp(-0.5 * t) + 0.55
+    fit = fit_exp_decay(t, acc)
+    assert abs(fit["c"] - 0.55) < 0.02
+    assert abs(fit["b"] - 0.5) < 0.1
+
+
+def test_recall_accuracy():
+    assert recall_accuracy((1, 2, 3), (2, 3)) == 1.0
+    assert recall_accuracy((1,), (2, 3)) == 0.0
+    assert recall_accuracy((2,), (2, 3)) == 0.5

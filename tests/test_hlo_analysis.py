@@ -1,0 +1,113 @@
+"""Unit tests for the HLO collective parser and loop-aware accounting —
+the machinery the roofline terms depend on."""
+import textwrap
+
+import pytest
+
+from repro.launch.hlo import (CollectiveStats, _collective_of_line,
+                              _group_size, _shape_bytes, _split_computations,
+                              _trip_count, collective_stats,
+                              loop_aware_collective_stats)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16", "16,4096") == 16 * 4096 * 2
+    assert _shape_bytes("f32", "") == 4
+    assert _shape_bytes("s8", "10") == 10
+
+
+def test_group_size_forms():
+    assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+    assert _group_size("replica_groups=[16,16]<=[256]") == 16
+    assert _group_size("no groups here") == 1
+
+
+def test_collective_of_line_kinds():
+    line = ("  %all-reduce.1 = f32[128,64]{1,0} all-reduce(%x), "
+            "replica_groups={{0,1}}, to_apply=%add")
+    kind, nbytes = _collective_of_line(line)
+    assert kind == "all-reduce"
+    assert nbytes == 128 * 64 * 4
+    # all-gather: operand = result / group size
+    line = ("  %ag = bf16[64,32]{1,0} all-gather(%x), "
+            "replica_groups={{0,1,2,3}}, dimensions={0}")
+    kind, nbytes = _collective_of_line(line)
+    assert kind == "all-gather"
+    assert nbytes == 64 * 32 * 2 // 4
+    # reduce-scatter: operand = result * group size
+    line = ("  %rs = f32[8]{0} reduce-scatter(%x), replica_groups={{0,1}}, "
+            "to_apply=%add")
+    kind, nbytes = _collective_of_line(line)
+    assert kind == "reduce-scatter"
+    assert nbytes == 8 * 4 * 2
+
+
+def test_non_collective_lines_ignored():
+    assert _collective_of_line("  %d = f32[2]{0} dot(%a, %b)") is None
+    assert _collective_of_line("random text") is None
+
+
+_FAKE_HLO = textwrap.dedent("""\
+    HloModule test
+
+    %add (a: f32[], b: f32[]) -> f32[] {
+      ROOT %r = f32[] add(%a, %b)
+    }
+
+    %cond (s: (s32[], f32[4])) -> pred[] {
+      %iv = s32[] get-tuple-element(%s), index=0
+      %limit = s32[] constant(10)
+      ROOT %lt = pred[] compare(%iv, %limit), direction=LT
+    }
+
+    %body (s: (s32[], f32[4])) -> (s32[], f32[4]) {
+      %x = f32[4]{0} get-tuple-element(%s), index=1
+      %ar = f32[4]{0} all-reduce(%x), replica_groups={{0,1}}, to_apply=%add
+      ROOT %t = (s32[], f32[4]) tuple(%iv, %ar)
+    }
+
+    ENTRY %main (p: f32[4]) -> f32[4] {
+      %ar0 = f32[4]{0} all-reduce(%p), replica_groups={{0,1}}, to_apply=%add
+      %w = (s32[], f32[4]) while(%init), condition=%cond, body=%body
+      ROOT %out = f32[4]{0} get-tuple-element(%w), index=1
+    }
+    """)
+
+
+def test_split_computations_and_trip_count():
+    comps, entry = _split_computations(_FAKE_HLO)
+    assert entry == "main"
+    assert "body" in comps and "cond" in comps
+    assert _trip_count(comps["cond"]) == 10
+
+
+def test_flat_vs_loop_aware():
+    flat = collective_stats(_FAKE_HLO)
+    assert flat.count_by_kind["all-reduce"] == 2          # counted once each
+    loop = loop_aware_collective_stats(_FAKE_HLO)
+    # entry ar0 (x1) + body ar (x10 trips)
+    assert loop.count_by_kind["all-reduce"] == 11
+    assert loop.bytes_by_kind["all-reduce"] == 11 * 16
+
+
+def test_merged_stats():
+    a = CollectiveStats({"all-reduce": 10}, {"all-reduce": 1})
+    b = CollectiveStats({"all-reduce": 5, "all-to-all": 7},
+                        {"all-reduce": 2, "all-to-all": 1})
+    m = a.merged(b)
+    assert m.bytes_by_kind == {"all-reduce": 15, "all-to-all": 7}
+    assert m.total_bytes == 22
+
+
+def test_n_blocks_causal_and_window():
+    from repro.launch.roofline import _n_blocks, Q_CHUNK, KV_CHUNK
+    # full attention: all blocks
+    assert _n_blocks(2048, 2048, causal=False) == \
+        (2048 // Q_CHUNK) * (2048 // KV_CHUNK)
+    # causal: roughly half + diagonal
+    full = _n_blocks(4096, 4096, causal=False)
+    causal = _n_blocks(4096, 4096, causal=True)
+    assert full / 2 <= causal <= full * 0.8
+    # window limits the band
+    win = _n_blocks(32768, 32768, causal=True, window=2048)
+    assert win < _n_blocks(32768, 32768, causal=True) * 0.2

@@ -1,0 +1,79 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+SHAPES_FFN = [
+    # (E, C, D, F, block_c, block_f)
+    (2, 128, 64, 128, 128, 128),
+    (4, 256, 64, 128, 128, 128),
+    (4, 256, 128, 256, 128, 128),
+    (8, 128, 32, 64, 64, 64),
+    (1, 512, 256, 512, 128, 256),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+@pytest.mark.parametrize("shape", SHAPES_FFN)
+def test_expert_ffn_matches_ref(shape, dtype):
+    E, C, D, F, bc, bf = shape
+    rng = np.random.default_rng(E * 1000 + C)
+    x = jnp.asarray(rng.standard_normal((E, C, D)), dtype) * 0.5
+    wg = jnp.asarray(rng.standard_normal((E, D, F)), dtype) * 0.1
+    wu = jnp.asarray(rng.standard_normal((E, D, F)), dtype) * 0.1
+    wd = jnp.asarray(rng.standard_normal((E, F, D)), dtype) * 0.1
+    out = ops.expert_ffn(x, wg, wu, wd, block_c=bc, block_f=bf,
+                         interpret=True)
+    ref = ops.expert_ffn_ref(x, wg, wu, wd)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("T,E,k", [(64, 8, 2), (100, 16, 4), (256, 64, 8),
+                                   (33, 128, 8), (7, 8, 8)])
+@pytest.mark.parametrize("norm", [True, False])
+def test_topk_gating_matches_ref(T, E, k, norm):
+    rng = np.random.default_rng(T * E)
+    logits = jnp.asarray(rng.standard_normal((T, E)), jnp.float32)
+    g, i = ops.topk(logits, k, norm=norm, interpret=True)
+    gr, ir = ops.topk_ref(logits, k, norm=norm)
+    # sets must match; order may differ only on exact ties (none w/ floats)
+    assert np.array_equal(np.asarray(i), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("S_extra", [0, 4])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_slot_ffn_matches_ref(S_extra, dtype):
+    E, C, D, F = 4, 128, 64, 128
+    S = E + S_extra
+    rng = np.random.default_rng(S)
+    x = jnp.asarray(rng.standard_normal((E, C, D)), dtype) * 0.5
+    sg = jnp.asarray(rng.standard_normal((S, D, F)), dtype) * 0.1
+    su = jnp.asarray(rng.standard_normal((S, D, F)), dtype) * 0.1
+    sd = jnp.asarray(rng.standard_normal((S, F, D)), dtype) * 0.1
+    soe = jnp.asarray(rng.permutation(S)[:E], jnp.int32)
+    out = ops.slot_ffn(x, soe, sg, su, sd, interpret=True)
+    ref = ops.slot_ffn_ref(x, soe, sg, su, sd)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+def test_slot_ffn_equals_expert_ffn_under_identity_mapping():
+    E, C, D, F = 4, 128, 64, 128
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((E, C, D)), jnp.bfloat16)
+    wg = jnp.asarray(rng.standard_normal((E, D, F)), jnp.bfloat16) * 0.1
+    wu = jnp.asarray(rng.standard_normal((E, D, F)), jnp.bfloat16) * 0.1
+    wd = jnp.asarray(rng.standard_normal((E, F, D)), jnp.bfloat16) * 0.1
+    ident = jnp.arange(E, dtype=jnp.int32)
+    a = ops.slot_ffn(x, ident, wg, wu, wd, interpret=True)
+    b = ops.expert_ffn(x, wg, wu, wd, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,161 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import TwoLevelLRU
+from repro.core.prefetcher import Prefetcher, Transfer, TransferLink
+from repro.core.step_size import (StepSizeConfig, StepSizeController,
+                                  expected_active_experts)
+from repro.models import moe as moe_mod
+
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------ cache
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 12),
+       st.lists(st.tuples(st.integers(0, 5), st.integers(0, 15),
+                          st.booleans()), min_size=1, max_size=120))
+def test_cache_never_exceeds_capacity_and_eviction_prefers_low(cap, ops):
+    c = TwoLevelLRU(cap)
+    for layer, expert, high in ops:
+        key = (layer, expert)
+        if not c.touch(key, high=high):
+            victim = c.insert(key, high=high)
+            if victim is not None:
+                assert victim not in c
+        assert len(c) <= cap
+        # tiers are disjoint
+        assert not (set(c.high) & set(c.low))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=60))
+def test_cache_hits_iff_resident(keys):
+    c = TwoLevelLRU(8)
+    resident = set()
+    for k in keys:
+        key = (0, k)
+        hit = c.touch(key)
+        assert hit == (key in resident)
+        if not hit:
+            victim = c.insert(key)
+            resident.add(key)
+            if victim is not None:
+                resident.discard(victim)
+        assert resident == set(c.resident())
+
+
+# ------------------------------------------------------------- controller
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.sampled_from(["stall", "over", "hit"]), max_size=200),
+       st.integers(1, 6), st.integers(1, 10))
+def test_step_size_always_in_bounds(events, st_thresh, of_thresh):
+    cfg = StepSizeConfig(stall_threshold=st_thresh,
+                         overfetch_threshold=of_thresh)
+    c = StepSizeController(cfg=cfg, s=3)
+    for e in events:
+        if e == "stall":
+            c.record_stall()
+        elif e == "over":
+            c.record_overfetch()
+        assert cfg.s_min <= c.s <= cfg.s_max
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(1e-3, 1.0), min_size=2, max_size=32),
+       st.floats(0.05, 0.95))
+def test_expected_active_experts_monotone_in_threshold(probs, thresh):
+    p = np.asarray(probs)
+    n1 = expected_active_experts(p, thresh)
+    n2 = expected_active_experts(p, min(thresh + 0.04, 0.99))
+    assert 1 <= n1 <= len(probs)
+    assert n2 >= n1
+
+
+# ------------------------------------------------------------- transfer link
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.floats(0.0, 5.0),
+                          st.floats(1e5, 1e8)), min_size=1, max_size=40))
+def test_link_serializes_and_respects_priorities(items):
+    link = TransferLink(bandwidth=1e9)
+    for i, (prio, t, nbytes) in enumerate(items):
+        link.submit(Transfer((0, i), nbytes, prio, t))
+    link.drain_until(1e9)
+    done = [tr for tr in link.completed]
+    assert len(done) == len(items)
+    # non-overlap: transfers never overlap on the serial link
+    done_sorted = sorted(done, key=lambda tr: tr.start_t)
+    for a, b in zip(done_sorted, done_sorted[1:]):
+        assert b.start_t >= a.done_t - 1e-9
+    # each starts no earlier than issue
+    for tr in done:
+        assert tr.start_t >= tr.issue_t - 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 30))
+def test_prefetcher_demand_is_idempotent(n):
+    link = TransferLink(1e9)
+    pf = Prefetcher(link, 1e6)
+    t1 = pf.demand((0, n), 0.0)
+    t2 = pf.demand((0, n), 0.0)
+    assert t1 == t2
+
+
+# ------------------------------------------------------------- MoE invariants
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 5), st.integers(2, 16), st.integers(1, 4),
+       st.integers(0, 1000))
+def test_router_gates_normalized_and_ids_unique(bt, experts, k, seed):
+    import jax
+    k = min(k, experts)
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (bt * 4, 16))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (16, experts))
+    r = moe_mod.route(w, x, k, norm_topk=True)
+    gates = np.asarray(r.gates)
+    ids = np.asarray(r.expert_ids)
+    np.testing.assert_allclose(gates.sum(-1), 1.0, rtol=1e-5)
+    for row in ids:
+        assert len(set(row.tolist())) == len(row)
+    assert (ids >= 0).all() and (ids < experts).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1000))
+def test_moe_grouped_matches_reference_without_drops(seed):
+    import dataclasses
+    import jax
+    from repro.configs.base import MoEConfig
+    moe = MoEConfig(num_experts=8, top_k=2, d_expert=16,
+                    capacity_factor=4.0)   # drop-free
+    key = jax.random.PRNGKey(seed)
+    params = moe_mod.init_moe_params(key, 32, moe, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (24, 32)) * 0.3
+    ref, _ = moe_mod.moe_reference(params, x, moe)
+    got, _ = moe_mod.moe_grouped(params, x, moe)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100))
+def test_dispatch_plan_conserves_assignments(seed):
+    import jax
+    key = jax.random.PRNGKey(seed)
+    ids = jax.random.randint(key, (32, 2), 0, 8)
+    tok, eid, pos, keep, order = moe_mod.compute_dispatch(ids, 8, capacity=64)
+    # every kept (token, expert) pair appears exactly once
+    kept = [(int(t), int(e)) for t, e, k in
+            zip(np.asarray(tok), np.asarray(eid), np.asarray(keep)) if k]
+    orig = [(i, int(e)) for i, row in enumerate(np.asarray(ids))
+            for e in row]
+    assert sorted(kept) == sorted(orig)
+    # positions within an expert are unique
+    by_e = {}
+    for e, p, k in zip(np.asarray(eid), np.asarray(pos), np.asarray(keep)):
+        if k:
+            by_e.setdefault(int(e), []).append(int(p))
+    for plist in by_e.values():
+        assert len(set(plist)) == len(plist)

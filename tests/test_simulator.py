@@ -1,0 +1,95 @@
+"""Simulator behaviour tests: policy ordering, oracle ceiling, paper shapes."""
+import numpy as np
+import pytest
+
+from repro.core import baseline, expertflow, pregate_fixed, promoe_like
+from repro.core.coordinator import ablation
+from repro.simulator.events import RoutingTrace, SimSpec, StepTrace, simulate
+from repro.simulator.hardware import PLATFORMS
+
+
+def synthetic_trace(L=6, M=16, steps=20, T=4, d=8, seed=0, locality=0.8):
+    """Synthetic routing with temporal locality: each step reuses the
+    previous step's experts with prob `locality`."""
+    rng = np.random.default_rng(seed)
+    routers = [rng.standard_normal((d, M)).astype(np.float32) * 0.3
+               for _ in range(L)]
+    tr = RoutingTrace("synthetic", L, M, top_k=2, routers=routers)
+    prev = rng.integers(0, M, (L, T, 2))
+    for s in range(steps):
+        assigns = []
+        for l in range(L):
+            cur = prev[l].copy()
+            mask = rng.random(cur.shape) > locality
+            cur[mask] = rng.integers(0, M, mask.sum())
+            assigns.append(cur)
+        prev = np.stack(assigns)
+        hidden = rng.standard_normal((L, d)).astype(np.float32)
+        tr.steps.append(StepTrace(s, rng.integers(0, 64, 8), list(prev),
+                                  hidden, rng.standard_normal((T, d))))
+    return tr
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return synthetic_trace()
+
+
+def _sim(capacity_frac=0.9, layer_ms=1.0, expert_mb=17.0, L=6, M=16):
+    return SimSpec(expert_bytes=expert_mb * 1e6, layer_time_s=layer_ms * 1e-3,
+                   capacity_experts=int(L * M * capacity_frac))
+
+
+def test_oracle_reaches_zero_steady_state_stall(trace):
+    hw = PLATFORMS["a6000"]
+    pol = ablation("oracle", predictor="oracle", adaptive_s=False, fixed_s=3)
+    rep = simulate(trace, _sim(), hw, pol)
+    # after warmup (step 0 cold start), stalls must vanish
+    steady = rep.steps[2:]
+    assert sum(s.stall_s for s in steady) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_prefetch_beats_no_prefetch(trace):
+    hw = PLATFORMS["a6000"]
+    base = simulate(trace, _sim(), hw, baseline())
+    orac = simulate(trace, _sim(), hw,
+                    ablation("oracle", predictor="oracle"))
+    assert orac.total_stall_s < base.total_stall_s
+
+
+def test_expertflow_cache_aware_reduces_stall(trace):
+    hw = PLATFORMS["a6000"]
+    on = simulate(trace, _sim(capacity_frac=0.6), hw, expertflow())
+    off = simulate(trace, _sim(capacity_frac=0.6), hw,
+                   ablation("no_cache_aware", cache_aware=False))
+    assert on.total_stall_s <= off.total_stall_s + 1e-9
+
+
+def test_slow_link_increases_stall(trace):
+    fast = simulate(trace, _sim(), PLATFORMS["h20"], baseline())
+    slow = simulate(trace, _sim(), PLATFORMS["rx6500xt"], baseline())
+    assert slow.total_stall_s > fast.total_stall_s
+
+
+def test_adaptive_s_stays_in_bounds(trace):
+    hw = PLATFORMS["rtx4090"]
+    rep = simulate(trace, _sim(capacity_frac=0.5), hw, expertflow())
+    cfg = expertflow().step_cfg
+    for s in rep.steps:
+        assert cfg.s_min <= s.step_size <= cfg.s_max
+
+
+def test_tiny_capacity_thrashes(trace):
+    """Fig 10 phenomenon: capacity below working set -> misses explode."""
+    hw = PLATFORMS["a6000"]
+    big = simulate(trace, _sim(capacity_frac=1.0), hw, expertflow())
+    tiny = simulate(trace, _sim(capacity_frac=0.15), hw, expertflow())
+    assert tiny.total_cache_miss_s > big.total_cache_miss_s
+
+
+def test_summary_fields(trace):
+    rep = simulate(trace, _sim(), PLATFORMS["a6000"], promoe_like(2))
+    s = rep.summary()
+    for k in ("stall_s", "compute_s", "hit_rate", "mean_step_size"):
+        assert k in s
+    assert s["total_s"] >= s["compute_s"]
