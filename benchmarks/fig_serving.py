@@ -1,0 +1,87 @@
+"""Serving-mode policy comparison under multi-tenant traffic.
+
+Sweeps baseline / pre-gate / ProMoE-like / ExpertFlow over the three
+arrival patterns (poisson / bursty / mixed) of the workload generator,
+with N concurrent requests sharing one expert cache and one host->device
+link through the continuous-batching serving simulator. Reports per-policy
+TTFT / TPOT p50/p99, queueing delay, and the stall decomposition.
+
+CPU-fast: routing traces are synthesized through the routers (see
+`repro.data.workloads.synthetic_request_trace`), no model execution.
+
+    PYTHONPATH=src python benchmarks/fig_serving.py
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import EXPERT_MB, LAYER_MS, Csv
+from repro.core import baseline, expertflow, pregate_fixed, promoe_like
+from repro.data.workloads import (WORKLOAD_PATTERNS, make_workload,
+                                  synthetic_request_trace, synthetic_routers)
+from repro.simulator.events import SimSpec
+from repro.simulator.hardware import PLATFORMS
+from repro.simulator.serving import (ServingConfig, ServingRequest,
+                                     ServingWorkload, simulate_serving)
+
+L_MOE = 8
+N_EXPERTS = 32
+TOP_K = 2
+D_ROUTER = 16
+
+
+def build_workload(pattern: str, n_requests: int, seed: int,
+                   routers) -> ServingWorkload:
+    """Fresh request objects per run (the simulator owns their state)."""
+    specs = make_workload(pattern, n_requests, seed=seed)
+    reqs = [ServingRequest(
+        prompt_len=s.prompt_len, max_new_tokens=s.decode_len,
+        steps=synthetic_request_trace(s, L_MOE, N_EXPERTS, TOP_K, routers,
+                                      seed=seed + 1),
+        arrival_s=s.arrival_s, request_id=s.request_id, topic=s.topic)
+        for s in specs]
+    return ServingWorkload(L_MOE, N_EXPERTS, TOP_K, routers, reqs,
+                           name=pattern)
+
+
+def run(csv: Csv, platform: str = "a6000", n_requests: int = 24,
+        capacity_frac: float = 0.5, max_batch: int = 4,
+        seed: int = 0) -> Dict[str, Dict[str, dict]]:
+    hw = PLATFORMS[platform]
+    routers = synthetic_routers(L_MOE, N_EXPERTS, D_ROUTER, seed=seed)
+    spec = SimSpec(expert_bytes=EXPERT_MB * 1e6,
+                   layer_time_s=LAYER_MS * 1e-3,
+                   capacity_experts=max(4, int(L_MOE * N_EXPERTS
+                                               * capacity_frac)))
+    cfg = ServingConfig(max_batch=max_batch)
+    out: Dict[str, Dict[str, dict]] = {}
+    for pattern in WORKLOAD_PATTERNS:
+        out[pattern] = {}
+        for pol in [baseline(), pregate_fixed(2), promoe_like(2),
+                    expertflow()]:
+            wl = build_workload(pattern, n_requests, seed, routers)
+            rep = simulate_serving(wl, spec, hw, pol, cfg=cfg)
+            s = rep.summary()
+            out[pattern][pol.name] = s
+            csv.add(
+                f"fig_serving/{platform}/{pattern}/{pol.name}",
+                s["makespan_s"] * 1e6,
+                f"ttft_p50_ms={s['ttft_p50_s']*1e3:.2f} "
+                f"ttft_p99_ms={s['ttft_p99_s']*1e3:.2f} "
+                f"tpot_p50_ms={s['tpot_p50_s']*1e3:.2f} "
+                f"tpot_p99_ms={s['tpot_p99_s']*1e3:.2f} "
+                f"queue_p99_ms={s['queue_delay_p99_s']*1e3:.2f} "
+                f"stall_ms={s['stall_s']*1e3:.2f} "
+                f"hit={s['hit_rate']:.3f} "
+                f"tok_per_s={s['throughput_tok_s']:.1f}")
+        base_stall = out[pattern]["baseline"]["stall_s"]
+        ef_stall = out[pattern]["expertflow"]["stall_s"]
+        print(f"# {pattern}: expertflow stall {ef_stall*1e3:.2f}ms vs "
+              f"baseline {base_stall*1e3:.2f}ms "
+              f"({'OK' if ef_stall < base_stall else 'REGRESSION'})",
+              flush=True)
+    return out
+
+
+if __name__ == "__main__":
+    run(Csv())

@@ -1,12 +1,14 @@
-"""End-to-end serving driver: continuous batching over a ShareGPT-like
-workload with ExpertFlow policy comparison (the paper's deployment shape).
+"""End-to-end serving driver: continuous batching over a Poisson request
+stream sharing one expert cache, with ExpertFlow policy comparison (the
+paper's deployment shape). See also --workload {poisson,bursty,mixed}.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
 import sys
 
 sys.argv = [sys.argv[0], "--arch", "qwen1.5-moe-a2.7b", "--requests", "8",
-            "--batch", "4", "--max-new", "8", "--platform", "a6000"]
+            "--batch", "4", "--max-new", "8", "--platform", "a6000",
+            "--workload", "poisson"]
 
 from repro.launch.serve import main  # noqa: E402
 

@@ -1,8 +1,18 @@
-"""Latency/stall metrics aggregation for simulator runs and engine steps."""
+"""Latency/stall metrics aggregation for simulator runs and engine steps.
+
+Two granularities:
+- `StepMetrics` / `RunReport`: per decode-iteration stall/hit accounting
+  (the paper's §4 waiting / cache-miss latency decomposition);
+- `RequestMetrics` / `ServingReport`: per-request SLO metrics for the
+  multi-tenant serving simulator — TTFT, TPOT, queueing delay, and their
+  p50/p95/p99 tails across the request population.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Sequence
+
+import numpy as np
 
 
 @dataclass
@@ -76,3 +86,115 @@ class RunReport:
             "mean_step_size": (sum(s.step_size for s in self.steps)
                                / max(len(self.steps), 1)),
         }
+
+
+# ---------------------------------------------------------------------------
+# Per-request SLO metrics (multi-tenant serving)
+# ---------------------------------------------------------------------------
+
+PERCENTILES = (50, 95, 99)
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    """Linear-interpolation percentile; 0.0 on an empty population."""
+    if not len(xs):
+        return 0.0
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+@dataclass
+class RequestMetrics:
+    """Lifecycle timestamps for one served request (all absolute seconds)."""
+    request_id: int
+    arrival_s: float
+    admitted_s: float       # left the waiting queue, slot assigned
+    first_token_s: float    # prefill complete, first token emitted
+    finish_s: float         # last token emitted
+    n_tokens: int           # output tokens (>= 1)
+    prompt_len: int = 0
+
+    @property
+    def queue_delay_s(self) -> float:
+        return self.admitted_s - self.arrival_s
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token, measured from arrival (includes queueing)."""
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def tpot_s(self) -> float:
+        """Time per output token over the decode phase (0 for 1-token
+        requests, which have no decode phase)."""
+        if self.n_tokens <= 1:
+            return 0.0
+        return (self.finish_s - self.first_token_s) / (self.n_tokens - 1)
+
+    @property
+    def e2e_s(self) -> float:
+        return self.finish_s - self.arrival_s
+
+
+@dataclass
+class ServingReport:
+    """Multi-request serving run: per-iteration stalls + per-request SLOs."""
+    run: RunReport = field(default_factory=RunReport)
+    requests: List[RequestMetrics] = field(default_factory=list)
+    policy: str = ""
+    platform: str = ""
+    model: str = ""
+    workload: str = ""
+    makespan_s: float = 0.0
+    mean_occupancy: float = 0.0
+
+    def add_request(self, m: RequestMetrics) -> None:
+        self.requests.append(m)
+
+    def _dist(self, attr: str) -> Dict[str, float]:
+        xs = [getattr(r, attr) for r in self.requests]
+        out = {f"p{q}": percentile(xs, q) for q in PERCENTILES}
+        out["mean"] = float(np.mean(xs)) if xs else 0.0
+        return out
+
+    @property
+    def ttft(self) -> Dict[str, float]:
+        return self._dist("ttft_s")
+
+    @property
+    def tpot(self) -> Dict[str, float]:
+        # 1-token requests have no decode phase; exclude them from TPOT
+        xs = [r.tpot_s for r in self.requests if r.n_tokens > 1]
+        out = {f"p{q}": percentile(xs, q) for q in PERCENTILES}
+        out["mean"] = float(np.mean(xs)) if xs else 0.0
+        return out
+
+    @property
+    def queue_delay(self) -> Dict[str, float]:
+        return self._dist("queue_delay_s")
+
+    @property
+    def throughput_tok_s(self) -> float:
+        n = sum(r.n_tokens for r in self.requests)
+        return n / self.makespan_s if self.makespan_s > 0 else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        out = {
+            "policy": self.policy,
+            "platform": self.platform,
+            "model": self.model,
+            "workload": self.workload,
+            "n_requests": len(self.requests),
+            "makespan_s": self.makespan_s,
+            "throughput_tok_s": self.throughput_tok_s,
+            "mean_occupancy": self.mean_occupancy,
+            "stall_s": self.run.total_stall_s,
+            "compute_s": self.run.total_compute_s,
+            "waiting_s": self.run.total_waiting_s,
+            "cache_miss_s": self.run.total_cache_miss_s,
+            "hit_rate": self.run.hit_rate,
+        }
+        for name, dist in (("ttft", self.ttft), ("tpot", self.tpot),
+                           ("queue_delay", self.queue_delay)):
+            for k, v in dist.items():
+                out[f"{name}_{k}_s"] = v
+        return out

@@ -1,42 +1,62 @@
 """Serving driver: continuous batching + ExpertFlow runtime + simulator.
 
     PYTHONPATH=src python -m repro.launch.serve --arch deepseek-v2-lite \
-        --requests 16 --max-new 12 --platform a6000
+        --requests 8 --max-new 12 --platform a6000 --workload poisson
 
-Runs the real reduced-config model (routing traces from actual execution),
-trains the forest predictor on a warmup split, then reports
-baseline / pre-gate / ProMoE-like / ExpertFlow stall latencies from the
-discrete-event simulator, plus the continuous-batching stats.
+Runs the real reduced-config model once per request (routing traces from
+actual JAX execution on workload-generated prompts), trains the forest
+predictor on the collected traces, then replays the request population —
+with its arrival pattern — through the multi-tenant serving simulator:
+requests share one expert cache, one host->device link, and one adaptive
+step-size controller under continuous batching. Reports per-policy
+TTFT / TPOT p50/p99, queueing delay, and stall latencies.
 """
 from __future__ import annotations
 
 import argparse
 
-import jax
 import numpy as np
 
 from repro.configs.registry import get_smoke_config
 from repro.core import (FeatureSpec, ForestPredictor, TraceLog, baseline,
                         expertflow, pregate_fixed, promoe_like)
-from repro.data.pipeline import batch_requests, sharegpt_like
-from repro.runtime.batching import ContinuousBatcher
+from repro.data.workloads import (WORKLOAD_PATTERNS, make_workload,
+                                  prompt_tokens)
 from repro.runtime.engine import Engine
-from repro.runtime.request import Request
-from repro.simulator.events import SimSpec, simulate
-from repro.simulator.hardware import (DEFAULT_EXPERT_MEM_FRACTION, PLATFORMS,
-                                      expert_bytes, layer_time_decode)
+from repro.simulator.events import SimSpec
+from repro.simulator.hardware import (PLATFORMS, expert_bytes,
+                                      layer_time_decode)
+from repro.simulator.serving import (ServingConfig, ServingRequest,
+                                     ServingWorkload, simulate_serving)
+
+
+def _pad_to_bucket(toks: np.ndarray, bucket: int = 16) -> np.ndarray:
+    """Right-pad prompts to bucket multiples to bound prefill recompiles."""
+    T = len(toks)
+    padded = ((T + bucket - 1) // bucket) * bucket
+    if padded == T:
+        return toks
+    return np.concatenate([toks, np.zeros(padded - T, toks.dtype)])
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-v2-lite")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="continuous-batching slots (max batch)")
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--platform", default="a6000",
                     choices=sorted(PLATFORMS))
     ap.add_argument("--capacity-frac", type=float, default=0.6)
+    ap.add_argument("--workload", default="poisson",
+                    choices=list(WORKLOAD_PATTERNS))
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.requests < 1:
+        ap.error("--requests must be >= 1")
+    if args.max_new < 2:
+        ap.error("--max-new must be >= 2 (need at least one decode step)")
 
     cfg = get_smoke_config(args.arch)
     hw = PLATFORMS[args.platform]
@@ -50,60 +70,54 @@ def main() -> None:
           f"{cap_plan.summary()}")
 
     eng = Engine(cfg, max_seq=256)
+    rng = np.random.default_rng(args.seed)
 
-    # --- continuous batching over a ShareGPT-like workload ---------------
-    reqs = sharegpt_like(vocab_size=cfg.vocab_size,
-                         length_groups=(8, 16, 32), per_group=4)
-    batcher = ContinuousBatcher(max_batch=args.batch)
-    for r in reqs[:args.requests]:
-        batcher.submit(Request(r.tokens, max_new_tokens=args.max_new))
-
-    # run groups through the engine (slot-granular joins happen per wave)
-    all_traces = []
+    # --- collect a real routing trace per request -------------------------
+    specs = make_workload(args.workload, args.requests, seed=args.seed,
+                          mean_decode=args.max_new)
+    requests = []
     all_logs = TraceLog()
-    wave = 0
-    while batcher.has_work:
-        admitted = batcher.admit()
-        if not admitted:
-            break
-        toks, lens = batch_requests(
-            [type("W", (), {"tokens": r.prompt})() for r in admitted],
-            batch=len(admitted))
-        out, trace, log = eng.generate(toks, n_steps=args.max_new)
-        all_traces.append(trace)
+    for spec_r in specs:
+        n_steps = max(2, min(spec_r.decode_len, args.max_new))
+        toks = _pad_to_bucket(prompt_tokens(spec_r, cfg.vocab_size, rng))
+        _, trace, log = eng.generate(toks[None, :], n_steps=n_steps)
         all_logs.extend(log.samples)
-        for i, r in enumerate(admitted):
-            for t in range(args.max_new):
-                batcher.step({r.slot: int(out[i, t])})
-        wave += 1
-    print(f"served {batcher.stats.completed} requests in {wave} waves; "
-          f"mean occupancy {batcher.stats.mean_occupancy:.2f}")
+        requests.append(ServingRequest(
+            prompt_len=spec_r.prompt_len, max_new_tokens=n_steps,
+            steps=trace.steps, arrival_s=spec_r.arrival_s,
+            request_id=spec_r.request_id, topic=spec_r.topic))
+    L, M = trace.num_moe_layers, trace.num_experts
+    print(f"collected {len(requests)} request traces "
+          f"({sum(len(r.steps) for r in requests)} decode steps, "
+          f"workload={args.workload})")
 
     # --- predictor training on collected traces ---------------------------
-    trace = all_traces[0]
-    for t in all_traces[1:]:
-        trace.steps.extend(t.steps)
-    L, M = trace.num_moe_layers, trace.num_experts
     spec = FeatureSpec(cfg.vocab_size, 16, L, M, include_pregate=True)
     forest = ForestPredictor(spec)
     mse = forest.fit(all_logs)
     print(f"forest trained on {len(all_logs.samples)} samples, mse={mse:.4f}")
 
-    # --- policy comparison -------------------------------------------------
+    # --- policy comparison under shared-cache serving ----------------------
     ebytes = expert_bytes(cfg)
     sim = SimSpec(
         expert_bytes=max(ebytes, 4e6),   # floor so transfers are visible
         layer_time_s=layer_time_decode(cfg, hw, args.batch, 64),
         capacity_experts=max(4, int(L * M * args.capacity_frac)))
+    scfg = ServingConfig(max_batch=args.batch)
     print(f"platform={hw.name} expert_bytes={sim.expert_bytes/1e6:.1f}MB "
           f"layer_time={sim.layer_time_s*1e3:.3f}ms "
-          f"capacity={sim.capacity_experts}/{L*M}")
-    for pol in [baseline(), pregate_fixed(2), promoe_like(2),
-                expertflow()]:
-        rep = simulate(trace, sim, hw, pol, forest=forest)
+          f"capacity={sim.capacity_experts}/{L*M} slots={args.batch}")
+    wl = ServingWorkload(L, M, trace.top_k, eng.routers(),
+                         requests, model=cfg.name, name=args.workload)
+    for pol in [baseline(), pregate_fixed(2), promoe_like(2), expertflow()]:
+        rep = simulate_serving(wl, sim, hw, pol, forest=forest, cfg=scfg)
         s = rep.summary()
         print(f"  {s['policy']:14s} stall={s['stall_s']*1e3:9.3f}ms "
-              f"hit={s['hit_rate']:.3f} S={s['mean_step_size']:.1f}")
+              f"ttft_p50={s['ttft_p50_s']*1e3:8.3f}ms "
+              f"ttft_p99={s['ttft_p99_s']*1e3:8.3f}ms "
+              f"tpot_p50={s['tpot_p50_s']*1e3:7.3f}ms "
+              f"tpot_p99={s['tpot_p99_s']*1e3:7.3f}ms "
+              f"hit={s['hit_rate']:.3f} occ={s['mean_occupancy']:.2f}")
 
 
 if __name__ == "__main__":

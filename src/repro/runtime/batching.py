@@ -41,11 +41,15 @@ class ContinuousBatcher:
     def submit(self, req: Request) -> None:
         self.waiting.append(req)
 
-    def admit(self, on_admit: Optional[Callable[[Request, int], None]] = None
-              ) -> List[Request]:
-        """Move waiting requests into free slots (prefill happens here)."""
+    def admit(self, on_admit: Optional[Callable[[Request, int], None]] = None,
+              now: Optional[float] = None) -> List[Request]:
+        """Move waiting requests into free slots (prefill happens here).
+        With `now`, only requests that have arrived (`arrival_s <= now`)
+        are admitted — the serving simulator's open-loop admission gate."""
         admitted = []
         while self.waiting and self.free_slots:
+            if now is not None and self.waiting[0].arrival_s > now:
+                break
             req = self.waiting.pop(0)
             slot = self.free_slots.pop(0)
             req.slot = slot
@@ -55,6 +59,15 @@ class ContinuousBatcher:
             self.stats.admitted += 1
             admitted.append(req)
         return admitted
+
+    def release(self, req: Request) -> None:
+        """Free a request's slot outside the `step()` path (e.g. a request
+        whose full output was produced at prefill)."""
+        if req.slot in self.active and self.active[req.slot] is req:
+            del self.active[req.slot]
+            self.free_slots.append(req.slot)
+            self.free_slots.sort()
+            self.stats.completed += 1
 
     def step(self, next_tokens: Dict[int, int]) -> List[Request]:
         """Record one decode iteration's sampled tokens; returns finished."""

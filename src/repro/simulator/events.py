@@ -16,11 +16,15 @@ Timeline model per decode step, per MoE layer l:
   4. the policy issues prefetches for layer l+S (predictions from pre-gate /
      forest over current hidden states);
   5. counters feed the adaptive-S controller; tier assignments update.
+
+The accelerator-side state machine (cache + link + controller + stall
+accounting) lives in `SimCore` so the single-trace replay below and the
+multi-tenant serving loop (`repro.simulator.serving`) share one timing model.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -33,6 +37,8 @@ from repro.core.predictor import ForestPredictor
 from repro.core.prefetcher import Prefetcher, TransferLink
 from repro.core.step_size import StepSizeController, token_diversity
 from repro.simulator.hardware import HardwareSpec
+
+Key = Tuple[int, int]
 
 
 @dataclass
@@ -68,23 +74,139 @@ def _distinct(assign: np.ndarray) -> List[int]:
     return sorted({int(e) for e in np.asarray(assign).reshape(-1)})
 
 
+class SimCore:
+    """One accelerator's shared expert-residency state.
+
+    Bundles the expert cache, host->device link, prefetcher, and adaptive-S
+    controller, plus the per-layer access/stall-attribution logic. One
+    `SimCore` is shared by every request stream hitting the device — the
+    single-trace `simulate()` holds one implicitly; the serving simulator
+    routes all concurrent requests through one instance.
+    """
+
+    def __init__(self, spec: SimSpec, hw: HardwareSpec, policy: Policy):
+        self.spec = spec
+        self.hw = hw
+        self.policy = policy
+        self.link = TransferLink(hw.host_bw)
+        self.pf = Prefetcher(self.link, spec.expert_bytes,
+                             blocking_swap_out=policy.blocking_swap_out)
+        self.cache = TwoLevelLRU(spec.capacity_experts)
+        self.controller = StepSizeController(
+            cfg=policy.step_cfg, s=policy.fixed_s,
+            bandwidth_est=hw.host_bw, layer_time_est=spec.layer_time_s)
+        self.prefetched_unused: Set[Key] = set()
+
+    @property
+    def s(self) -> int:
+        return self.controller.s if self.policy.adaptive_s \
+            else self.policy.fixed_s
+
+    # -- residency bookkeeping ---------------------------------------------
+    def insert(self, key: Key, sm: StepMetrics) -> None:
+        """Land a transferred expert in the cache (with eviction fallout)."""
+        if key in self.cache:
+            return
+        victim = self.cache.insert(key, high=not self.policy.two_level_lru)
+        if victim is not None:
+            self.pf.forget(victim)
+            self.pf.writeback(0.0)
+            if victim in self.prefetched_unused:
+                self.prefetched_unused.discard(victim)
+                sm.n_overfetched += 1
+                self.controller.record_overfetch()
+
+    def land_arrivals(self, now: float, sm: StepMetrics) -> None:
+        """Insert transfers completed by `now` into the cache."""
+        for key in self.pf.advance(now):
+            self.insert(key, sm)
+
+    # -- layer execution ----------------------------------------------------
+    def access_layer(self, li: int, assignments: np.ndarray, now: float,
+                     sm: StepMetrics, layer_time_s: Optional[float] = None,
+                     actual: Optional[List[int]] = None) -> float:
+        """Run one MoE layer's expert accesses and compute at time `now`.
+
+        `assignments` is the (T, k) token->expert table for the layer — for
+        a co-scheduled batch, the concatenation over all requests in the
+        batch. `actual` is its distinct expert list, passable when the
+        caller already computed it. Resolves misses via demand loads,
+        attributes exposed stall (cold -> cache-miss, in-flight -> waiting),
+        and returns the layer's finish time.
+        """
+        lt = self.spec.layer_time_s if layer_time_s is None else layer_time_s
+        if actual is None:
+            actual = _distinct(assignments)
+        keys = [(li, e) for e in actual]
+
+        missing_inflight: List[Key] = []
+        missing_cold: List[Key] = []
+        for key in keys:
+            if self.cache.touch(key, high=self.policy.two_level_lru):
+                sm.n_hits += 1
+                self.prefetched_unused.discard(key)
+            else:
+                sm.n_misses += 1
+                if key in self.pf.issued:
+                    missing_inflight.append(key)
+                else:
+                    missing_cold.append(key)
+
+        # resolve misses: cold demands go at top priority (§3.4)
+        ready_t = now
+        for key in missing_cold + missing_inflight:
+            t_done = self.pf.demand(key, now)
+            ready_t = max(ready_t, t_done)
+            self.insert(key, sm)
+        missing = set(missing_cold) | set(missing_inflight)
+
+        # schedule layer compute
+        if self.policy.cache_aware and missing:
+            resident_set = {e for (l2, e) in keys if (l2, e) not in missing}
+            split = split_by_residency(assignments, resident_set)
+            finish, exposed = overlap_schedule(split, lt, ready_t, now)
+        else:
+            finish, exposed = sequential_schedule(
+                lt, ready_t if missing else now, now)
+        # attribute exposed stall: in-flight -> waiting, cold -> miss
+        if exposed > 0:
+            if missing_cold:
+                sm.cache_miss_s += exposed
+            else:
+                sm.waiting_s += exposed
+            self.controller.record_stall()
+        sm.compute_s += finish - now - exposed
+        self.controller.update_layer_time(lt)
+        return finish
+
+    # -- prefetch issue -----------------------------------------------------
+    def note_predictions(self, li: int, outstanding: Set[Key],
+                         s: Optional[int] = None) -> None:
+        """Tier maintenance after a prediction round at layer `li`. `s` is
+        the step size frozen at step start (the live controller value may
+        already have moved mid-step)."""
+        if self.policy.two_level_lru:
+            self.cache.retier(outstanding, range(max(0, li - 2), li + 1), li)
+        if self.policy.protect_early_layers:
+            self.cache.protect_early_layers(self.s if s is None else s)
+
+    def issue_prefetches(self, pkeys: Iterable[Key], now: float) -> None:
+        for key in pkeys:
+            if key not in self.cache:
+                self.pf.prefetch(key, now)
+                self.prefetched_unused.add(key)
+
+
 def simulate(trace: RoutingTrace, spec: SimSpec, hw: HardwareSpec,
              policy: Policy, forest: Optional[ForestPredictor] = None,
              max_steps: Optional[int] = None) -> RunReport:
     L, M = trace.num_moe_layers, trace.num_experts
-    link = TransferLink(hw.host_bw)
-    pf = Prefetcher(link, spec.expert_bytes,
-                    blocking_swap_out=policy.blocking_swap_out)
-    cache = TwoLevelLRU(spec.capacity_experts)
-    controller = StepSizeController(cfg=policy.step_cfg, s=policy.fixed_s,
-                                    bandwidth_est=hw.host_bw,
-                                    layer_time_est=spec.layer_time_s)
+    core = SimCore(spec, hw, policy)
     source = PredictionSource(policy, trace.routers, forest, M, trace.top_k)
     report = RunReport(policy=policy.name, platform=hw.name, model=trace.model)
 
-    prefetched_unused: Set[Tuple[int, int]] = set()
-    predicted_sets: Dict[int, Set[Tuple[int, int]]] = {}
-    predicted_next: Dict[int, Set[Tuple[int, int]]] = {}
+    predicted_sets: Dict[int, Set[Key]] = {}
+    predicted_next: Dict[int, Set[Key]] = {}
     now = 0.0
     prev_step: Optional[StepTrace] = None
 
@@ -97,13 +219,15 @@ def simulate(trace: RoutingTrace, spec: SimSpec, hw: HardwareSpec,
         if policy.adaptive_s and st.step_idx == 0 and st.embeddings is not None:
             # initial S from the formula (§3.2.1) using layer-0 pre-gate
             pg0 = source.pregate.probs(st.hidden_pooled[0][None, :], 0)
-            controller.initialize(pg0, spec.expert_bytes,
-                                  token_diversity(st.embeddings))
-        s = controller.s if policy.adaptive_s else policy.fixed_s
+            core.controller.initialize(pg0, spec.expert_bytes,
+                                       token_diversity(st.embeddings))
+        s = core.s
         sm.step_size = s
 
         # step-begin prefetch for early layers not already covered by the
-        # previous step's wraparound predictions (one decode step stale)
+        # previous step's wraparound predictions (one decode step stale).
+        # The serving loop (`serving.simulate_serving`) mirrors this and the
+        # li+s wrap-target prediction below per request — keep them in sync.
         if policy.prefetch and prev_step is not None:
             for tgt in range(min(s, L)):
                 if tgt in predicted_sets:
@@ -115,63 +239,13 @@ def simulate(trace: RoutingTrace, spec: SimSpec, hw: HardwareSpec,
                     actual=_distinct(st.assignments[tgt]))
                 keys = {(tgt, e) for e in pred}
                 predicted_sets[tgt] = keys
-                for key in keys:
-                    if key not in cache:
-                        pf.prefetch(key, now)
-                        prefetched_unused.add(key)
+                core.issue_prefetches(keys, now)
 
         for li in range(L):
-            # land arrivals; insert into cache with tiering
-            for key in pf.advance(now):
-                _insert(cache, key, policy, pf, prefetched_unused,
-                        controller, sm)
-
+            core.land_arrivals(now, sm)
             actual = _distinct(st.assignments[li])
-            keys = [(li, e) for e in actual]
-            predicted = predicted_sets.get(li, set())
-
-            missing_inflight, missing_cold = [], []
-            for key in keys:
-                if cache.touch(key, high=policy.two_level_lru):
-                    sm.n_hits += 1
-                    prefetched_unused.discard(key)
-                else:
-                    sm.n_misses += 1
-                    if key in pf.issued:
-                        missing_inflight.append(key)
-                    else:
-                        missing_cold.append(key)
-
-            # resolve misses: cold demands go at top priority (§3.4)
-            ready_t = now
-            for key in missing_cold + missing_inflight:
-                t_done = pf.demand(key, now)
-                ready_t = max(ready_t, t_done)
-                _insert(cache, key, policy, pf, prefetched_unused,
-                        controller, sm)
-            missing = set(missing_cold) | set(missing_inflight)
-
-            # schedule layer compute
-            if policy.cache_aware and missing:
-                resident_set = {e for (l2, e) in keys
-                                if (l2, e) not in missing}
-                split = split_by_residency(st.assignments[li], resident_set)
-                finish, exposed = overlap_schedule(
-                    split, spec.layer_time_s, ready_t, now)
-            else:
-                finish, exposed = sequential_schedule(
-                    spec.layer_time_s, ready_t if missing else now, now)
-            # attribute exposed stall: in-flight -> waiting, cold -> miss
-            if exposed > 0:
-                if missing_cold:
-                    sm.cache_miss_s += exposed
-                    controller.record_stall()
-                else:
-                    sm.waiting_s += exposed
-                    controller.record_stall()
-            sm.compute_s += finish - now - exposed
-            now = finish
-            controller.update_layer_time(spec.layer_time_s)
+            now = core.access_layer(li, st.assignments[li], now, sm,
+                                    actual=actual)
 
             # issue prefetch for layer li + s (prediction from current
             # hidden); past the last layer it wraps into the next decode
@@ -189,41 +263,20 @@ def simulate(trace: RoutingTrace, spec: SimSpec, hw: HardwareSpec,
                         actual=_distinct(tgt_step.assignments[tgt_mod]))
                     pkeys = {(tgt_mod, e) for e in pred}
                     (predicted_next if wrap else predicted_sets)[tgt_mod] = pkeys
-                    if policy.two_level_lru:
-                        outstanding = set()
+                    outstanding: Set[Key] = set()
+                    if policy.two_level_lru:     # only retier consumes it
                         for v in predicted_sets.values():
                             outstanding |= v
                         for v in predicted_next.values():
                             outstanding |= v
-                        cache.retier(outstanding,
-                                     range(max(0, li - 2), li + 1), li)
-                    if policy.protect_early_layers:
-                        cache.protect_early_layers(s)
-                    for key in pkeys:
-                        if key not in cache:
-                            pf.prefetch(key, now)
-                            prefetched_unused.add(key)
+                    core.note_predictions(li, outstanding, s)
+                    core.issue_prefetches(pkeys, now)
 
             # history update (forest feature)
             for e in actual:
                 history[li, e] = 1.0
 
-        sm.n_prefetched = pf.n_prefetches
+        sm.n_prefetched = core.pf.n_prefetches
         report.add(sm)
         prev_step = st
     return report
-
-
-def _insert(cache: TwoLevelLRU, key, policy: Policy, pf: Prefetcher,
-            prefetched_unused: Set, controller: StepSizeController,
-            sm: StepMetrics) -> None:
-    if key in cache:
-        return
-    victim = cache.insert(key, high=not policy.two_level_lru)
-    if victim is not None:
-        pf.forget(victim)
-        pf.writeback(0.0)
-        if victim in prefetched_unused:
-            prefetched_unused.discard(victim)
-            sm.n_overfetched += 1
-            controller.record_overfetch()

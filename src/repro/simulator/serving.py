@@ -1,0 +1,319 @@
+"""Multi-tenant serving simulator: concurrent requests, one expert cache.
+
+Extends the single-trace replay (`repro.simulator.events.simulate`) to the
+paper's actual evaluation regime (§4.1, continuous batching enabled): N
+requests with distinct arrival times, prompt lengths, and decode lengths are
+admitted into `ContinuousBatcher` slots, interleave their decode iterations,
+and *share* one `TwoLevelLRU` expert cache, one host->device `TransferLink`,
+and one adaptive step-size controller (all inside one `SimCore`).
+
+Per decode iteration, per MoE layer l:
+  - the layer's demand set is the UNION of the co-batched requests' actual
+    expert assignments (token tables concatenated, so cache-aware routing
+    sees the whole batch);
+  - prefetch predictions are issued per request from its own hidden state
+    and MERGED across the batch before tier maintenance and link submission.
+
+Prefill is modelled as a full layer sweep whose per-layer compute scales
+with ceil(prompt_len / prefill_chunk); the request's step-0 routing runs
+through the shared cache during that sweep (seeding residency per tenant)
+and the first output token is emitted when prefill completes. Subsequent
+tokens arrive one per decode iteration, giving the TTFT / TPOT / queueing
+SLO metrics in `core.metrics.ServingReport`.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.coordinator import Policy, PredictionSource
+from repro.core.metrics import (RequestMetrics, RunReport, ServingReport,
+                                StepMetrics)
+from repro.core.predictor import ForestPredictor
+from repro.core.step_size import token_diversity
+from repro.runtime.batching import ContinuousBatcher
+from repro.simulator.events import SimCore, SimSpec, StepTrace, _distinct
+from repro.simulator.hardware import HardwareSpec
+
+Key = Tuple[int, int]
+
+
+@dataclass
+class ServingRequest:
+    """A request plus its per-step routing trace and runtime state.
+
+    `steps[0]` supplies the prefill routing; `steps[t]` the t-th decode
+    iteration's. Traces shorter than the decode length cycle (mod len).
+    Duck-types the fields `ContinuousBatcher` relies on (slot/output/done/
+    arrival_s).
+    """
+    prompt_len: int
+    max_new_tokens: int
+    steps: List[StepTrace]
+    arrival_s: float = 0.0
+    request_id: int = 0
+    topic: int = 0
+    # runtime state (owned by simulate_serving)
+    slot: int = -1
+    output: List[int] = field(default_factory=list)
+    step_idx: int = 0
+    admitted_s: float = -1.0
+    first_token_s: float = -1.0
+    finish_s: float = -1.0
+    predicted: Dict[int, Set[Key]] = field(default_factory=dict)
+    predicted_next: Dict[int, Set[Key]] = field(default_factory=dict)
+    history: Optional[np.ndarray] = None
+
+    @property
+    def done(self) -> bool:
+        return len(self.output) >= self.max_new_tokens
+
+    def step_trace(self, i: int) -> StepTrace:
+        return self.steps[i % len(self.steps)]
+
+    @property
+    def remaining_tokens(self) -> int:
+        return self.max_new_tokens - len(self.output)
+
+    def reset_runtime(self) -> None:
+        self.slot = -1
+        self.output = []
+        self.step_idx = 0
+        self.admitted_s = self.first_token_s = self.finish_s = -1.0
+        self.predicted = {}
+        self.predicted_next = {}
+        self.history = None
+
+
+@dataclass
+class ServingWorkload:
+    """Model metadata + the request population hitting the device."""
+    num_moe_layers: int
+    num_experts: int
+    top_k: int
+    routers: List[np.ndarray]
+    requests: List[ServingRequest]
+    model: str = "synthetic"
+    name: str = ""
+
+
+@dataclass
+class ServingConfig:
+    max_batch: int = 4
+    prefill_chunk: int = 16      # prompt tokens per layer-time of prefill
+    max_iterations: int = 200000
+
+
+def _token_table(assign: np.ndarray) -> np.ndarray:
+    """Normalize a layer assignment to a (T, k) token->expert table."""
+    a = np.asarray(assign)
+    return a.reshape(-1, 1) if a.ndim == 1 else a
+
+
+def _request_metrics(r: ServingRequest) -> RequestMetrics:
+    return RequestMetrics(request_id=r.request_id, arrival_s=r.arrival_s,
+                          admitted_s=r.admitted_s,
+                          first_token_s=r.first_token_s,
+                          finish_s=r.finish_s, n_tokens=len(r.output),
+                          prompt_len=r.prompt_len)
+
+
+def _predict_target(core: SimCore, source: PredictionSource,
+                    r: ServingRequest, st: StepTrace, li: int, s: int,
+                    L: int) -> Optional[Set[Key]]:
+    """Per-request prediction for layer li+s (wrapping into the request's
+    next decode step past the last layer). Returns the predicted keys and
+    records them in the request's predicted/predicted_next maps.
+
+    Mirrors the single-stream wrap-target logic in `events.simulate` with
+    per-request state in place of that loop's local dicts — a semantic
+    change in either site must be applied to both.
+    """
+    tgt = li + s
+    wrap = tgt >= L
+    tgt_mod = tgt - L if wrap else tgt
+    if tgt_mod >= L:
+        return None
+    if wrap:
+        if r.remaining_tokens <= 1:      # no next decode step for r
+            return None
+        tgt_step = r.step_trace(r.step_idx + 1)
+    else:
+        tgt_step = st
+    pred = source.predict(
+        hidden=st.hidden_pooled[li][None, :], target_layer_pos=tgt_mod,
+        token_ids=tgt_step.token_ids, s=s, history=r.history,
+        actual=_distinct(tgt_step.assignments[tgt_mod]))
+    pkeys = {(tgt_mod, e) for e in pred}
+    (r.predicted_next if wrap else r.predicted)[tgt_mod] = pkeys
+    return pkeys
+
+
+def _outstanding(active: Sequence[ServingRequest]) -> Set[Key]:
+    out: Set[Key] = set()
+    for r in active:
+        for v in r.predicted.values():
+            out |= v
+        for v in r.predicted_next.values():
+            out |= v
+    return out
+
+
+def simulate_serving(workload: ServingWorkload, spec: SimSpec,
+                     hw: HardwareSpec, policy: Policy,
+                     forest: Optional[ForestPredictor] = None,
+                     cfg: Optional[ServingConfig] = None) -> ServingReport:
+    """Run the multi-request event loop; returns per-request SLO metrics
+    plus the per-iteration stall decomposition."""
+    cfg = cfg or ServingConfig()
+    L, M = workload.num_moe_layers, workload.num_experts
+    core = SimCore(spec, hw, policy)
+    source = PredictionSource(policy, workload.routers, forest, M,
+                              workload.top_k)
+    batcher = ContinuousBatcher(cfg.max_batch)
+    report = ServingReport(
+        run=RunReport(policy=policy.name, platform=hw.name,
+                      model=workload.model),
+        policy=policy.name, platform=hw.name, model=workload.model,
+        workload=workload.name)
+
+    pending = sorted(workload.requests,
+                     key=lambda r: (r.arrival_s, r.request_id))
+    for r in pending:
+        r.reset_runtime()
+        r.history = np.zeros((L, M), np.float64)
+
+    now = 0.0
+    it = 0
+    s_initialized = False
+
+    def finish(r: ServingRequest, t: float) -> None:
+        r.finish_s = t
+        report.add_request(_request_metrics(r))
+
+    while pending or batcher.has_work:
+        if it >= cfg.max_iterations:
+            raise RuntimeError("serving simulation exceeded max_iterations")
+
+        # open-loop arrivals: enqueue everything that has arrived by `now`
+        while pending and pending[0].arrival_s <= now:
+            batcher.submit(pending.pop(0))
+        if not batcher.active and not batcher.waiting:
+            now = max(now, pending[0].arrival_s)     # idle: jump to arrival
+            continue
+
+        # -- admission + prefill (serial: prefill occupies the accelerator)
+        for r in batcher.admit(now=now):
+            r.admitted_s = now
+            sm = StepMetrics(step=it)
+            it += 1
+            st0 = r.step_trace(0)
+            if policy.adaptive_s and not s_initialized \
+                    and st0.embeddings is not None:
+                pg0 = source.pregate.probs(st0.hidden_pooled[0][None, :], 0)
+                core.controller.initialize(pg0, spec.expert_bytes,
+                                           token_diversity(st0.embeddings))
+                s_initialized = True
+            s = core.s
+            sm.step_size = s
+            chunks = max(1, math.ceil(r.prompt_len / cfg.prefill_chunk))
+            layer_t = spec.layer_time_s * chunks
+            for li in range(L):
+                core.land_arrivals(now, sm)
+                now = core.access_layer(li, st0.assignments[li], now, sm,
+                                        layer_time_s=layer_t)
+                if policy.prefetch:
+                    pkeys = _predict_target(core, source, r, st0, li, s, L)
+                    if pkeys:
+                        # tier maintenance must see ALL co-resident tenants'
+                        # predictions, not just the admitted request's —
+                        # otherwise prefill demotes its neighbours' experts
+                        tenants = list(batcher.active.values())
+                        core.note_predictions(
+                            li,
+                            _outstanding(tenants) if policy.two_level_lru
+                            else set(), s)
+                        core.issue_prefetches(pkeys, now)
+                for e in _distinct(st0.assignments[li]):
+                    r.history[li, e] = 1.0
+            r.output.append(0)
+            r.first_token_s = now
+            sm.n_prefetched = core.pf.n_prefetches
+            report.run.add(sm)
+            if r.done:                   # 1-token request: done at prefill
+                finish(r, now)
+                batcher.release(r)
+
+        active = [batcher.active[slot] for slot in batcher.active_slots()]
+        if not active:
+            continue
+
+        # -- one decode iteration across all co-batched requests ------------
+        sm = StepMetrics(step=it)
+        it += 1
+        s = core.s
+        sm.step_size = s
+        for r in active:
+            r.step_idx += 1
+            r.predicted, r.predicted_next = r.predicted_next, {}
+            r.history = np.zeros((L, M), np.float64)
+
+        # step-begin prefetch for early layers not already covered by the
+        # previous step's wraparound predictions
+        if policy.prefetch:
+            begin_keys: Set[Key] = set()
+            for r in active:
+                cur = r.step_trace(r.step_idx)
+                prev = r.step_trace(r.step_idx - 1)
+                for tgt in range(min(s, L)):
+                    if tgt in r.predicted:
+                        continue
+                    pred = source.predict(
+                        hidden=prev.hidden_pooled[tgt][None, :],
+                        target_layer_pos=tgt, token_ids=cur.token_ids,
+                        s=s, history=r.history,
+                        actual=_distinct(cur.assignments[tgt]))
+                    keys = {(tgt, e) for e in pred}
+                    r.predicted[tgt] = keys
+                    begin_keys |= keys
+            core.issue_prefetches(begin_keys, now)
+
+        for li in range(L):
+            core.land_arrivals(now, sm)
+            merged = np.concatenate(
+                [_token_table(r.step_trace(r.step_idx).assignments[li])
+                 for r in active], axis=0)
+            now = core.access_layer(li, merged, now, sm)
+
+            if policy.prefetch:
+                new_keys: Set[Key] = set()
+                predicted_any = False
+                for r in active:
+                    st = r.step_trace(r.step_idx)
+                    pkeys = _predict_target(core, source, r, st, li, s, L)
+                    if pkeys is not None:
+                        predicted_any = True
+                        new_keys |= pkeys
+                if predicted_any:
+                    core.note_predictions(
+                        li,
+                        _outstanding(active) if policy.two_level_lru
+                        else set(), s)
+                    core.issue_prefetches(new_keys, now)
+
+            for r in active:
+                for e in _distinct(r.step_trace(r.step_idx).assignments[li]):
+                    r.history[li, e] = 1.0
+
+        sm.n_prefetched = core.pf.n_prefetches
+        report.run.add(sm)
+
+        for r in batcher.step({r.slot: 0 for r in active}):
+            finish(r, now)
+
+    report.makespan_s = now
+    report.mean_occupancy = batcher.stats.mean_occupancy
+    return report

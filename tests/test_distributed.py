@@ -86,6 +86,7 @@ def test_bubble_fraction():
     assert bubble_fraction(4, 4) == pytest.approx(3 / 7)
 
 
+@pytest.mark.slow
 def test_small_mesh_pjit_forward_matches_single_device():
     """pjit the forward on a 1x1 'production-shaped' mesh (host device) and
     compare against plain eager execution — proves the sharding annotations

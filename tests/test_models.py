@@ -11,6 +11,8 @@ from repro.training.loss import chunked_cross_entropy
 from repro.training.optimizer import adamw_init, adamw_update
 from repro.training.steps import make_loss_fn
 
+pytestmark = pytest.mark.slow   # per-arch compile+run, ~60s total
+
 B, T = 2, 16
 
 

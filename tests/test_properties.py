@@ -1,5 +1,13 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+Skips cleanly when hypothesis is not installed (it is a dev-only extra,
+see requirements-dev.txt); the deterministic seeded-fuzz variants in
+`test_link_invariants.py` always run.
+"""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cache import TwoLevelLRU
@@ -91,6 +99,85 @@ def test_link_serializes_and_respects_priorities(items):
     # each starts no earlier than issue
     for tr in done:
         assert tr.start_t >= tr.issue_t - 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.floats(0.0, 5.0),
+                          st.floats(1e5, 1e8)), min_size=1, max_size=40))
+def test_link_completion_monotone_within_priority_class(items):
+    """Within one priority class the link is FIFO: completion times are
+    monotone in submit order."""
+    link = TransferLink(bandwidth=1e9)
+    for i, (prio, t, nbytes) in enumerate(items):
+        link.submit(Transfer((prio, i), nbytes, prio, t))
+    link.drain_until(1e12)
+    for prio in (0, 1, 2):
+        done = [tr for tr in link.completed if tr.priority == prio]
+        done.sort(key=lambda tr: tr.key[1])       # submit order
+        for a, b in zip(done, done[1:]):
+            assert b.done_t >= a.done_t - 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 2), st.floats(1e5, 1e7)),
+                min_size=3, max_size=30),
+       st.floats(0.0, 0.02), st.integers(0, 29))
+def test_link_promote_never_reorders_in_flight_work(items, drain_t, pick):
+    """promote() raises only *queued* transfers: transfers already started
+    or completed keep their times, and non-promoted same-class transfers
+    keep their relative order."""
+    link = TransferLink(bandwidth=1e9)
+    for i, (prio, nbytes) in enumerate(items):
+        link.submit(Transfer((0, i), nbytes, prio, 0.0))
+    link.drain_until(drain_t)
+    before = {tr.key: tr.done_t for tr in link.completed}
+    key = (0, pick % len(items))
+    link.promote(key)
+    link.drain_until(1e12)
+    after = {tr.key: tr.done_t for tr in link.completed}
+    for k, t in before.items():                   # in-flight work untouched
+        assert after[k] == t
+    for prio in (1, 2):                           # FIFO among non-promoted
+        done = [tr for tr in link.completed
+                if tr.priority == prio and tr.key != key]
+        done.sort(key=lambda tr: tr.key[1])
+        for a, b in zip(done, done[1:]):
+            assert b.done_t >= a.done_t - 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.floats(0.0, 2.0),
+                          st.floats(1e5, 1e8)), min_size=1, max_size=30),
+       st.integers(0, 29))
+def test_link_finish_agrees_with_drain_until(items, pick):
+    """finish(key) and drain_until(inf) assign identical done_t."""
+    la, lb = TransferLink(1e9), TransferLink(1e9)
+    for i, (prio, t, nbytes) in enumerate(items):
+        la.submit(Transfer((0, i), nbytes, prio, t))
+        lb.submit(Transfer((0, i), nbytes, prio, t))
+    key = (0, pick % len(items))
+    t_finish = la.finish(key, 0.0)
+    lb.drain_until(1e12)
+    t_drain = next(tr.done_t for tr in lb.completed if tr.key == key)
+    assert t_finish == t_drain
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2), st.floats(0.0, 5.0),
+                          st.floats(1e5, 1e8)), min_size=1, max_size=40),
+       st.lists(st.floats(0.0, 10.0), max_size=5))
+def test_link_bytes_moved_accounts_completed_transfers(items, drains):
+    link = TransferLink(bandwidth=1e9)
+    for i, (prio, t, nbytes) in enumerate(items):
+        link.submit(Transfer((0, i), nbytes, prio, t))
+    for t in sorted(drains):
+        link.drain_until(t)
+        assert link.bytes_moved == pytest.approx(
+            sum(tr.nbytes for tr in link.completed))
+    link.drain_until(1e12)
+    assert link.bytes_moved == pytest.approx(
+        sum(tr.nbytes for tr in link.completed))
+    assert len(link.completed) == len(items)
 
 
 @settings(max_examples=30, deadline=None)

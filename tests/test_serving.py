@@ -1,0 +1,294 @@
+"""Multi-tenant serving simulator tests: SLO math, shared-cache contention,
+merged prefetch, and the workload generators."""
+import numpy as np
+import pytest
+
+from repro.core import baseline, expertflow
+from repro.core.coordinator import ablation
+from repro.core.metrics import RequestMetrics, percentile
+from repro.data.workloads import (WORKLOAD_PATTERNS, bursty_arrivals,
+                                  make_workload, poisson_arrivals,
+                                  synthetic_request_trace, synthetic_routers)
+from repro.simulator.events import SimSpec, StepTrace
+from repro.simulator.hardware import HardwareSpec, PLATFORMS
+from repro.simulator.serving import (ServingConfig, ServingRequest,
+                                     ServingWorkload, simulate_serving)
+
+MS = 1e-3
+
+# fast fat link: transfer time 1e-9 s — stalls vanish below tolerances
+FAST_HW = HardwareSpec("test", host_bw=1e12, flops=1e15, hbm_bw=1e12,
+                       mem_cap=1e9)
+
+
+def plain_policy(**kw):
+    """No prefetch, plain LRU, sequential scheduling — hand-computable."""
+    base = dict(prefetch=False, adaptive_s=False, two_level_lru=False,
+                cache_aware=False, blocking_swap_out=False,
+                protect_early_layers=False)
+    base.update(kw)
+    return ablation("plain", **base)
+
+
+def micro_steps(n_steps, experts_by_layer, L=2, M=4, d=4):
+    """Constant routing: layer li always activates experts_by_layer[li]."""
+    steps = []
+    for si in range(n_steps):
+        assigns = [np.array([[e] for e in experts_by_layer[li]])
+                   for li in range(L)]
+        steps.append(StepTrace(si, np.arange(4), assigns,
+                               np.zeros((L, d), np.float32)))
+    return steps
+
+
+def micro_workload(reqs, L=2, M=4, d=4, name="micro"):
+    routers = [np.zeros((d, M), np.float32) for _ in range(L)]
+    return ServingWorkload(L, M, 1, routers, reqs, name=name)
+
+
+# ------------------------------------------------------- hand-computed SLOs
+def test_ttft_tpot_match_hand_computed_two_request_timeline():
+    """L=2, T_l=1ms, prompt=one prefill chunk -> prefill = 2ms; decode
+    iteration = 2ms. r1 arrives at 0.5ms mid-r0-prefill."""
+    r0 = ServingRequest(prompt_len=16, max_new_tokens=3,
+                        steps=micro_steps(3, [[0], [1]]),
+                        arrival_s=0.0, request_id=0)
+    r1 = ServingRequest(prompt_len=16, max_new_tokens=2,
+                        steps=micro_steps(2, [[2], [3]]),
+                        arrival_s=0.5 * MS, request_id=1)
+    spec = SimSpec(expert_bytes=1e3, layer_time_s=1 * MS, capacity_experts=16)
+    rep = simulate_serving(micro_workload([r0, r1]), spec, FAST_HW,
+                           plain_policy(),
+                           cfg=ServingConfig(max_batch=2, prefill_chunk=16))
+    by_id = {m.request_id: m for m in rep.requests}
+    tol = 1e-6
+    # r0: prefill [0, 2ms]; decode iterations [2,4] and [6,8] (r1's prefill
+    # occupies [4,6] after admission at the iteration boundary).
+    assert by_id[0].ttft_s == pytest.approx(2 * MS, abs=tol)
+    assert by_id[0].finish_s == pytest.approx(8 * MS, abs=tol)
+    assert by_id[0].tpot_s == pytest.approx(3 * MS, abs=tol)
+    assert by_id[0].queue_delay_s == pytest.approx(0.0, abs=tol)
+    # r1: admitted at the 4ms boundary, prefill [4,6], decode [6,8]
+    assert by_id[1].queue_delay_s == pytest.approx(3.5 * MS, abs=tol)
+    assert by_id[1].ttft_s == pytest.approx(5.5 * MS, abs=tol)
+    assert by_id[1].finish_s == pytest.approx(8 * MS, abs=tol)
+    assert by_id[1].tpot_s == pytest.approx(2 * MS, abs=tol)
+    assert rep.makespan_s == pytest.approx(8 * MS, abs=tol)
+
+
+def test_single_slot_serializes_requests():
+    """max_batch=1: r1 waits for r0's full completion (queueing delay)."""
+    r0 = ServingRequest(prompt_len=16, max_new_tokens=3,
+                        steps=micro_steps(3, [[0], [1]]),
+                        arrival_s=0.0, request_id=0)
+    r1 = ServingRequest(prompt_len=16, max_new_tokens=2,
+                        steps=micro_steps(2, [[2], [3]]),
+                        arrival_s=0.5 * MS, request_id=1)
+    spec = SimSpec(expert_bytes=1e3, layer_time_s=1 * MS, capacity_experts=16)
+    rep = simulate_serving(micro_workload([r0, r1]), spec, FAST_HW,
+                           plain_policy(),
+                           cfg=ServingConfig(max_batch=1, prefill_chunk=16))
+    by_id = {m.request_id: m for m in rep.requests}
+    tol = 1e-6
+    assert by_id[0].finish_s == pytest.approx(6 * MS, abs=tol)
+    assert by_id[1].queue_delay_s == pytest.approx(5.5 * MS, abs=tol)
+    assert by_id[1].ttft_s == pytest.approx(7.5 * MS, abs=tol)
+    assert by_id[1].finish_s == pytest.approx(10 * MS, abs=tol)
+
+
+def test_prefill_time_scales_with_prompt_chunks():
+    """A 32-token prompt takes two prefill chunks: 2x per-layer time."""
+    r0 = ServingRequest(prompt_len=32, max_new_tokens=1,
+                        steps=micro_steps(1, [[0], [1]]), request_id=0)
+    spec = SimSpec(expert_bytes=1e3, layer_time_s=1 * MS, capacity_experts=16)
+    rep = simulate_serving(micro_workload([r0]), spec, FAST_HW,
+                           plain_policy(),
+                           cfg=ServingConfig(max_batch=1, prefill_chunk=16))
+    assert rep.requests[0].ttft_s == pytest.approx(4 * MS, abs=1e-6)
+    assert rep.requests[0].tpot_s == 0.0      # no decode phase
+
+
+# ------------------------------------------------- shared-cache contention
+def _hot_request(rid, experts_by_layer, n_steps=10):
+    return ServingRequest(prompt_len=16, max_new_tokens=n_steps,
+                          steps=micro_steps(n_steps, experts_by_layer,
+                                            L=2, M=16),
+                          arrival_s=0.0, request_id=rid)
+
+
+def _misses(rep):
+    return sum(sm.n_misses for sm in rep.run.steps)
+
+
+def test_disjoint_tenants_thrash_tight_shared_cache():
+    """Two requests with disjoint hot experts under a cache that fits only
+    ONE working set: co-scheduling produces strictly more misses than the
+    two single-tenant runs combined."""
+    ra = [[0, 1, 2, 3], [4, 5, 6, 7]]          # 8 (layer, expert) keys
+    rb = [[8, 9, 10, 11], [12, 13, 14, 15]]    # disjoint 8 keys
+    spec = SimSpec(expert_bytes=1e3, layer_time_s=1 * MS, capacity_experts=8)
+    cfg = ServingConfig(max_batch=2, prefill_chunk=16)
+
+    def run(reqs):
+        wl = ServingWorkload(2, 16, 1,
+                             [np.zeros((4, 16), np.float32)] * 2,
+                             reqs, name="contention")
+        return simulate_serving(wl, spec, FAST_HW, plain_policy(), cfg=cfg)
+
+    alone_a = _misses(run([_hot_request(0, ra)]))
+    alone_b = _misses(run([_hot_request(1, rb)]))
+    joint = _misses(run([_hot_request(0, ra), _hot_request(1, rb)]))
+    # alone: 8 cold misses each, everything after hits
+    assert alone_a == 8 and alone_b == 8
+    assert joint > alone_a + alone_b
+
+
+def test_shared_cache_helps_same_topic_tenants():
+    """Identical hot sets: the second tenant free-rides on the first's
+    residency — joint misses are LOWER than the single-run sum."""
+    hot = [[0, 1, 2, 3], [4, 5, 6, 7]]
+    spec = SimSpec(expert_bytes=1e3, layer_time_s=1 * MS, capacity_experts=8)
+    cfg = ServingConfig(max_batch=2, prefill_chunk=16)
+
+    def run(reqs):
+        wl = ServingWorkload(2, 16, 1,
+                             [np.zeros((4, 16), np.float32)] * 2,
+                             reqs, name="sharing")
+        return simulate_serving(wl, spec, FAST_HW, plain_policy(), cfg=cfg)
+
+    alone = _misses(run([_hot_request(0, hot)]))
+    joint = _misses(run([_hot_request(0, hot), _hot_request(1, hot)]))
+    assert joint < 2 * alone
+
+
+# ------------------------------------------------------- merged prefetching
+def _rotating_request(rid, offset, n_steps=8, L=2, M=16, span=8):
+    """Routing shifts every step: each decode step demands a fresh expert
+    per layer, so prefetch (not residual residency) must cover it."""
+    steps = []
+    for si in range(n_steps):
+        assigns = [np.array([[offset + (si + li) % span]])
+                   for li in range(L)]
+        steps.append(StepTrace(si, np.arange(4), assigns,
+                               np.zeros((L, 4), np.float32)))
+    return ServingRequest(prompt_len=16, max_new_tokens=n_steps, steps=steps,
+                          arrival_s=0.0, request_id=rid)
+
+
+def test_oracle_prefetch_covers_co_batched_requests():
+    """With oracle predictions merged across two concurrent tenants and
+    ample capacity/bandwidth, steady-state decode stalls vanish — even
+    though the rotating routing forces fresh transfers every step."""
+    ra = _rotating_request(0, offset=0)
+    rb = _rotating_request(1, offset=8)
+    spec = SimSpec(expert_bytes=1e6, layer_time_s=1 * MS,
+                   capacity_experts=32)
+    pol = ablation("oracle", predictor="oracle", adaptive_s=False, fixed_s=2)
+    wl = ServingWorkload(2, 16, 1, [np.zeros((4, 16), np.float32)] * 2,
+                         [ra, rb], name="oracle")
+    rep = simulate_serving(wl, spec, PLATFORMS["a6000"], pol,
+                           cfg=ServingConfig(max_batch=2, prefill_chunk=16))
+    steady = rep.run.steps[3:]
+    assert len(steady) > 0
+    assert sum(sm.stall_s for sm in steady) == pytest.approx(0.0, abs=1e-9)
+    assert rep.run.steps[-1].n_prefetched > 0
+
+
+def test_serving_expertflow_beats_baseline_on_synthetic_traffic():
+    """End-to-end policy ordering on the fig_serving operating point."""
+    L, M, top_k, d = 8, 32, 2, 16
+    routers = synthetic_routers(L, M, d, seed=0)
+    spec = SimSpec(expert_bytes=17.3e6, layer_time_s=1 * MS,
+                   capacity_experts=int(L * M * 0.5))
+
+    def build():
+        specs = make_workload("poisson", 16, seed=0)
+        return ServingWorkload(
+            L, M, top_k, routers,
+            [ServingRequest(prompt_len=s.prompt_len,
+                            max_new_tokens=s.decode_len,
+                            steps=synthetic_request_trace(
+                                s, L, M, top_k, routers, seed=1),
+                            arrival_s=s.arrival_s, request_id=s.request_id,
+                            topic=s.topic) for s in specs],
+            name="poisson")
+
+    base = simulate_serving(build(), spec, PLATFORMS["a6000"], baseline())
+    ef = simulate_serving(build(), spec, PLATFORMS["a6000"], expertflow())
+    assert ef.run.total_stall_s < base.run.total_stall_s
+
+
+# ------------------------------------------------------------ SLO metrics
+def test_request_metrics_properties():
+    m = RequestMetrics(request_id=0, arrival_s=1.0, admitted_s=1.5,
+                       first_token_s=2.0, finish_s=5.0, n_tokens=4)
+    assert m.queue_delay_s == pytest.approx(0.5)
+    assert m.ttft_s == pytest.approx(1.0)
+    assert m.tpot_s == pytest.approx(1.0)
+    assert m.e2e_s == pytest.approx(4.0)
+    assert RequestMetrics(1, 0, 0, 1, 1, n_tokens=1).tpot_s == 0.0
+
+
+def test_percentile_helper():
+    xs = list(range(1, 101))
+    assert percentile(xs, 50) == pytest.approx(50.5)
+    assert percentile(xs, 99) == pytest.approx(99.01)
+    assert percentile([], 50) == 0.0
+
+
+# --------------------------------------------------------------- workloads
+def test_poisson_arrivals_sorted_and_deterministic():
+    rng = np.random.default_rng(0)
+    a = poisson_arrivals(50, rate_rps=100.0, rng=rng)
+    assert a[0] == 0.0
+    assert np.all(np.diff(a) >= 0)
+    b = poisson_arrivals(50, rate_rps=100.0,
+                         rng=np.random.default_rng(0))
+    np.testing.assert_allclose(a, b)
+
+
+def test_bursty_arrivals_cluster_into_bursts():
+    rng = np.random.default_rng(0)
+    a = bursty_arrivals(30, burst_size=6, gap_s=0.5, intra_s=1e-3, rng=rng)
+    gaps = np.diff(a)
+    # intra-burst gaps are tiny, inter-burst gaps large
+    assert (gaps < 1e-2).sum() == 25
+    assert (gaps > 0.1).sum() == 4
+
+
+def test_mixed_workload_is_bimodal():
+    specs = make_workload("mixed", 200, seed=0,
+                          short_prompt=16, long_prompt=64)
+    lens = {s.prompt_len for s in specs}
+    assert lens == {16, 64}
+
+
+@pytest.mark.parametrize("pattern", WORKLOAD_PATTERNS)
+def test_workload_shapes_and_determinism(pattern):
+    a = make_workload(pattern, 20, seed=3)
+    b = make_workload(pattern, 20, seed=3)
+    assert len(a) == 20
+    for x, y in zip(a, b):
+        assert (x.arrival_s, x.prompt_len, x.decode_len, x.topic) == \
+            (y.arrival_s, y.prompt_len, y.decode_len, y.topic)
+        assert x.arrival_s >= 0 and x.prompt_len >= 2 and x.decode_len >= 2
+
+
+def test_unknown_workload_pattern_raises():
+    with pytest.raises(ValueError):
+        make_workload("sinusoidal", 4)
+
+
+def test_synthetic_trace_shapes_and_expert_range():
+    routers = synthetic_routers(4, 8, 8, seed=0)
+    spec = make_workload("poisson", 1, seed=0)[0]
+    spec.decode_len = 5
+    steps = synthetic_request_trace(spec, 4, 8, 2, routers, seed=0)
+    assert len(steps) == 5
+    for st in steps:
+        assert len(st.assignments) == 4
+        for a in st.assignments:
+            assert a.shape[1] == 2
+            assert (a >= 0).all() and (a < 8).all()
+    assert steps[0].embeddings is not None
+    assert steps[1].embeddings is None

@@ -17,6 +17,9 @@ from repro.simulator.events import SimSpec, simulate
 from repro.simulator.hardware import PLATFORMS
 
 
+pytestmark = pytest.mark.slow   # real-model end-to-end loop
+
+
 @pytest.fixture(scope="module")
 def pipeline():
     cfg = get_smoke_config("deepseek-v2-lite")
