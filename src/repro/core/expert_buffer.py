@@ -4,9 +4,12 @@ GPU expert cache).
 A bounded number of *slots* hold expert FFN weights in device memory; an
 indirection table maps (layer, expert) -> slot. The host-side controller
 (`TwoLevelLRU` + prefetcher) owns the replacement policy; the device side is
-purely functional: `swap_in` is a jitted `dynamic_update_slice` (standing in
-for the async host->HBM DMA a real deployment would issue), and the MoE layer
-computes through `repro.models.moe.moe_slotbuf` using the indirection.
+purely functional: `swap_in_many` writes ALL of a layer's missing experts in
+one jitted donated scatter fed from `HostExpertStore`'s pre-staged
+contiguous host views (standing in for the batched async host->HBM DMA a
+real deployment would issue; `swap_in` is the per-expert legacy form), and
+the MoE layer computes through `repro.models.moe.moe_slotbuf` using the
+indirection.
 """
 from __future__ import annotations
 
@@ -45,6 +48,70 @@ def swap_in(slots: Dict[str, jnp.ndarray], slot_idx: jnp.ndarray,
         "w_down": jax.lax.dynamic_update_slice_in_dim(
             slots["w_down"], w_down[None], i, axis=0),
     }
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _swap_in_many(slots: Dict[str, jnp.ndarray], slot_idx: jnp.ndarray,
+                  w_gate: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray):
+    return {
+        "w_gate": slots["w_gate"].at[slot_idx].set(w_gate),
+        "w_up": slots["w_up"].at[slot_idx].set(w_up),
+        "w_down": slots["w_down"].at[slot_idx].set(w_down),
+    }
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+def swap_in_many(slots: Dict[str, jnp.ndarray], slot_idx,
+                 w_gate, w_up, w_down) -> Dict[str, jnp.ndarray]:
+    """Write N experts' weights in ONE donated device dispatch.
+
+    Replaces N sequential `swap_in` calls (N dispatches, N param-tree
+    re-slices) with a single batched scatter. slot_idx: (N,) distinct slots;
+    weights: stacked (N, d, f) / (N, f, d) host views (see HostExpertStore).
+    N is padded up to the next power of two by repeating the LAST entry —
+    duplicate indices then carry identical payloads, so the scatter stays
+    deterministic — bounding the jit cache at O(log n_slots) entries.
+    """
+    idx = np.asarray(slot_idx, np.int32)
+    n = idx.shape[0]
+    assert n > 0, "swap_in_many needs at least one expert"
+    m = _next_pow2(n)
+    wg, wu, wd = (np.asarray(w) for w in (w_gate, w_up, w_down))
+    if m != n:
+        pad = np.full((m - n,), idx[-1], np.int32)
+        idx = np.concatenate([idx, pad])
+        wg = np.concatenate([wg, np.broadcast_to(wg[-1:], (m - n,) + wg.shape[1:])])
+        wu = np.concatenate([wu, np.broadcast_to(wu[-1:], (m - n,) + wu.shape[1:])])
+        wd = np.concatenate([wd, np.broadcast_to(wd[-1:], (m - n,) + wd.shape[1:])])
+    return _swap_in_many(slots, jnp.asarray(idx), jnp.asarray(wg),
+                         jnp.asarray(wu), jnp.asarray(wd))
+
+
+class HostExpertStore:
+    """Pre-staged contiguous host copies of every MoE layer's expert weights.
+
+    Built once at engine init; `gather` stacks an arbitrary expert subset
+    with numpy fancy indexing — the swap path never re-slices the device
+    param tree again (the old path issued one device slice per tensor per
+    expert per swap)."""
+
+    def __init__(self):
+        self._layers: Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+
+    def add_layer(self, layer: int, w_gate, w_up, w_down) -> None:
+        self._layers[layer] = tuple(
+            np.ascontiguousarray(np.asarray(w))
+            for w in (w_gate, w_up, w_down))
+
+    def gather(self, layer: int, experts
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(N,) expert ids -> stacked (w_gate, w_up, w_down) host arrays."""
+        idx = np.asarray(experts, np.int32)
+        wg, wu, wd = self._layers[layer]
+        return wg[idx], wu[idx], wd[idx]
 
 
 class SlotTable:

@@ -35,6 +35,16 @@ def _slot_ffn_kernel(slot_ref, x_ref, wg_ref, wu_ref, wd_ref, o_ref):
     o_ref[0] += part
 
 
+def _fit_block(n: int, want: int) -> int:
+    """Largest divisor of n that is <= want (tile sizes must divide the
+    axis; callers on real TPUs should pass aligned shapes, interpret mode
+    accepts anything)."""
+    b = min(want, n)
+    while n % b:
+        b -= 1
+    return b
+
+
 @functools.partial(jax.jit, static_argnames=("block_c", "block_f",
                                              "interpret"))
 def slot_ffn(x: jnp.ndarray, slot_of_expert: jnp.ndarray,
@@ -45,9 +55,8 @@ def slot_ffn(x: jnp.ndarray, slot_of_expert: jnp.ndarray,
     slot buffers (S, D, F) / (S, F, D). Returns (E, C, D) float32."""
     E, C, D = x.shape
     F = s_gate.shape[-1]
-    block_c = min(block_c, C)
-    block_f = min(block_f, F)
-    assert C % block_c == 0 and F % block_f == 0
+    block_c = _fit_block(C, block_c)
+    block_f = _fit_block(F, block_f)
     grid = (E, C // block_c, F // block_f)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

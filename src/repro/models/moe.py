@@ -110,19 +110,16 @@ def _moe_shard_map(params, x, ids_g, gates_g, moe, capacity, mesh, fsdp):
     daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     msize = mesh.shape["model"]
     E_loc = E // msize
-    gather_wg = fsdp and d % _dsize(mesh, daxes_data := ("data",)) == 0 \
-        and "data" in mesh.axis_names
-    f = moe.d_expert
-    gather_wd = fsdp and d % _dsize(mesh, ("data",)) == 0 \
-        and "data" in mesh.axis_names
+    # wg/wu gather along axis 1 and wd along axis 2, but the gathered dim is
+    # d_model in every case, so one legality check covers all three
+    gather_w = _fsdp_gather_ok(mesh, fsdp, d)
 
     def local_fn(wg, wu, wd, x_blk, ids_blk, gates_blk):
         # blocks: wg/wu (E_loc, d/?, f), wd (E_loc, f, d/?),
         # x_blk (G_loc, Tg, d), ids/gates (G_loc, Tg, k)
-        if gather_wg:
+        if gather_w:
             wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
             wu = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
-        if gather_wd:
             wd = jax.lax.all_gather(wd, "data", axis=2, tiled=True)
         G_loc = x_blk.shape[0]
         e0 = jax.lax.axis_index("model") * E_loc
@@ -160,8 +157,8 @@ def _moe_shard_map(params, x, ids_g, gates_g, moe, capacity, mesh, fsdp):
         # contributions from <= top_k shards, so bf16 summation is benign)
         return jax.lax.psum(out.astype(x_blk.dtype), "model")
 
-    wspec_in = P("model", "data" if gather_wg else None, None)
-    wdspec_in = P("model", None, "data" if gather_wd else None)
+    wspec_in = P("model", "data" if gather_w else None, None)
+    wdspec_in = P("model", None, "data" if gather_w else None)
     bspec = P(daxes if daxes else None, None, None)
     return shard_map(
         local_fn, mesh=mesh,
@@ -177,6 +174,12 @@ def _dsize(mesh, axes) -> int:
         if a in mesh.axis_names:
             n *= mesh.shape[a]
     return n
+
+
+def _fsdp_gather_ok(mesh, fsdp: bool, dim: int) -> bool:
+    """FSDP weight all-gather is legal iff `dim` tiles evenly over `data`."""
+    return (fsdp and "data" in mesh.axis_names
+            and dim % _dsize(mesh, ("data",)) == 0)
 
 
 def _can_shard_map(mesh, moe, G, Tg, d) -> bool:
@@ -263,8 +266,11 @@ def moe_grouped(params, x: jnp.ndarray, moe,
     slot = eid * capacity + pos_c                        # (G, Tg*k)
     sentinel = jnp.asarray(Tg, jnp.int32)                # pad row index
     slot_tok = jnp.full((G, E * capacity), sentinel, jnp.int32)
-    slot_tok = slot_tok.at[jnp.arange(G)[:, None], slot].set(
-        jnp.where(keep, tok, sentinel).astype(jnp.int32))
+    # dropped assignments write OUT of range (mode="drop") so they cannot
+    # clobber the kept token occupying (e, capacity-1) — cf. _moe_shard_map
+    write_idx = jnp.where(keep, slot, E * capacity)
+    slot_tok = slot_tok.at[jnp.arange(G)[:, None], write_idx].set(
+        tok.astype(jnp.int32), mode="drop")
     # shard the (tiny) index map over (data, model) so the payload gather is
     # LOCAL per shard — each (data, model) shard reads only its experts' rows
     slot_tok = constrain(slot_tok.reshape(G, E, capacity),
@@ -304,14 +310,77 @@ def moe_grouped(params, x: jnp.ndarray, moe,
 # Slot-buffer (ExpertFlow runtime) formulation
 # ---------------------------------------------------------------------------
 
+def _dispatch_gather(x: jnp.ndarray, group_ids: jnp.ndarray, n_groups: int,
+                     capacity: int):
+    """Inverse-permutation gather dispatch (the `moe_grouped` scheme).
+
+    Instead of scatter-ADDING (T*k, d) payload rows into the group buffer,
+    scatter only the small int32 slot->token map and build the buffer with a
+    single gather. group_ids may exceed n_groups - 1 (sentinel groups): those
+    assignments land past the real buffer and are dropped by `mode="drop"`.
+
+    Returns (buf (n_groups, capacity, d), tok, gid, keep, order, flat_slot)
+    where gid is the sorted group id per assignment and flat_slot indexes
+    rows of buf.reshape(n_groups*capacity, d), only valid where
+    `keep & (gid < n_groups)`.
+    """
+    T, d = x.shape
+    tok, gid, pos, keep, order = compute_dispatch(group_ids, n_groups + 1,
+                                                  capacity)
+    pos_c = jnp.where(keep, pos, capacity - 1)
+    flat_slot = gid * capacity + pos_c                        # (T*k,)
+    sentinel_tok = jnp.asarray(T, jnp.int32)
+    slot_tok = jnp.full((n_groups * capacity,), sentinel_tok, jnp.int32)
+    # dropped (over-capacity) assignments must write OUT of range, not onto
+    # (group, capacity-1) — a duplicate-index set there could clobber the
+    # kept occupant of the last row (cf. _moe_shard_map's slot_local)
+    write_idx = jnp.where(keep, flat_slot, n_groups * capacity)
+    slot_tok = slot_tok.at[write_idx].set(tok.astype(jnp.int32), mode="drop")
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    buf = x_pad[slot_tok].reshape(n_groups, capacity, d)
+    return buf, tok, gid, keep, order, flat_slot
+
+
+def _combine_gather(y_flat: jnp.ndarray, flat_slot: jnp.ndarray,
+                    tok: jnp.ndarray, weight: jnp.ndarray, T: int, d: int,
+                    valid: jnp.ndarray) -> jnp.ndarray:
+    """Gather each assignment's FFN row back and fp32 scatter-add per token.
+
+    y_flat: (rows, d); rows indexed by flat_slot where `valid`, anything else
+    reads the appended zero pad row.
+    """
+    rows = y_flat.shape[0]
+    y_pad = jnp.concatenate(
+        [y_flat, jnp.zeros((1, d), y_flat.dtype)], axis=0)
+    idx = jnp.where(valid, flat_slot, rows)
+    contrib = y_pad[idx].astype(jnp.float32) * weight[:, None]
+    return jnp.zeros((T, d), jnp.float32).at[tok].add(contrib)
+
+
 def moe_slotbuf(params, slot_weights, slot_of_expert: jnp.ndarray,
-                x: jnp.ndarray, moe, capacity: Optional[int] = None):
+                x: jnp.ndarray, moe, capacity: Optional[int] = None,
+                router_out: Optional[RouterOutput] = None,
+                use_kernel: bool = False, interpret: Optional[bool] = None):
     """MoE compute where expert weights live in a bounded slot buffer.
 
     slot_weights: dict(w_gate (S, d, f), w_up (S, d, f), w_down (S, f, d))
-    with S = n_slots < E. `slot_of_expert`: (E,) int32, -1 if not resident —
-    the runtime guarantees residency before dispatch, so -1 maps to slot 0
-    and the gate is zeroed (it also counts as a miss upstream).
+    with S = n_slots (usually < E). `slot_of_expert`: (E,) int32, -1 if not
+    resident. Tokens routed to a non-resident expert have their gates zeroed
+    AND dispatch to a dead sentinel slot past the real buffer, so they can
+    never consume a real slot's capacity (clamping them to slot 0 let misses
+    evict slot-0's own tokens). The runtime guarantees residency before
+    dispatch, so in normal operation the sentinel slot stays empty.
+
+    `router_out` skips re-routing when the caller already routed (the fused
+    engine routes on device first to learn the needed-expert set).
+
+    Two numerically equivalent expert paths:
+    - einsum over the slot-grouped buffer (the numerics oracle; dispatch
+      groups by *slot*, so compute scales with S not E);
+    - ``use_kernel=True``: the Pallas slot-indirect kernel
+      (`kernels.slot_gather.slot_ffn`) — dispatch groups by *expert* and the
+      kernel's scalar-prefetch indirection streams each expert's weights
+      from its slot (interpret mode on CPU, Mosaic on TPU).
     Router weights / shared experts stay permanently resident (small).
     """
     T, d = x.shape
@@ -319,22 +388,39 @@ def moe_slotbuf(params, slot_weights, slot_of_expert: jnp.ndarray,
     n_slots = slot_weights["w_gate"].shape[0]
     if capacity is None:
         capacity = max(1, int(T * k / max(E, 1) * moe.capacity_factor) * 4)
-    r = route(params["router"], x, k, moe.router_norm_topk)
-    resident = slot_of_expert[r.expert_ids] >= 0                  # (T, k)
+    r = router_out if router_out is not None else route(
+        params["router"], x, k, moe.router_norm_topk)
+    slot_raw = slot_of_expert[r.expert_ids]                       # (T, k)
+    resident = slot_raw >= 0
     gates = r.gates * resident.astype(r.gates.dtype)
-    slot_ids = jnp.maximum(slot_of_expert[r.expert_ids], 0).astype(jnp.int32)
-    tok, sid, pos, keep, order = compute_dispatch(slot_ids, n_slots, capacity)
-    pos_c = jnp.where(keep, pos, capacity - 1)
-    xg = x[tok] * keep[:, None].astype(x.dtype)
-    buf = jnp.zeros((n_slots, capacity, d), x.dtype).at[sid, pos_c].add(xg)
-    g = jnp.einsum("scd,sdf->scf", buf, slot_weights["w_gate"])
-    u = jnp.einsum("scd,sdf->scf", buf, slot_weights["w_up"])
-    h = jax.nn.silu(g) * u
-    y = jnp.einsum("scf,sfd->scd", h, slot_weights["w_down"])
-    flat_gates = gates.reshape(-1)[order]
-    contrib = y[sid, pos_c].astype(jnp.float32) * \
-        (flat_gates * keep.astype(jnp.float32))[:, None]
-    out = jnp.zeros((T, d), jnp.float32).at[tok].add(contrib).astype(x.dtype)
+
+    if use_kernel:
+        # per-EXPERT dispatch; the kernel chases expert -> slot indirection
+        from repro.kernels import ops as kernel_ops
+        buf, tok, eid, keep, order, flat_slot = _dispatch_gather(
+            x, r.expert_ids, E, capacity)
+        slot_valid = jnp.maximum(slot_of_expert, 0).astype(jnp.int32)
+        y = kernel_ops.slot_ffn(buf, slot_valid, slot_weights["w_gate"],
+                                slot_weights["w_up"], slot_weights["w_down"],
+                                interpret=interpret)              # (E, C, d)
+        flat_gates = gates.reshape(-1)[order]
+        weight = flat_gates * keep.astype(jnp.float32)
+        out = _combine_gather(y.reshape(E * capacity, d), flat_slot, tok,
+                              weight, T, d, valid=keep).astype(x.dtype)
+    else:
+        # per-SLOT dispatch; non-resident assignments go to sentinel slot S
+        slot_ids = jnp.where(resident, slot_raw, n_slots).astype(jnp.int32)
+        buf, tok, sid, keep, order, flat_slot = _dispatch_gather(
+            x, slot_ids, n_slots, capacity)
+        g = jnp.einsum("scd,sdf->scf", buf, slot_weights["w_gate"])
+        u = jnp.einsum("scd,sdf->scf", buf, slot_weights["w_up"])
+        h = jax.nn.silu(g) * u
+        y = jnp.einsum("scf,sfd->scd", h, slot_weights["w_down"])
+        flat_gates = gates.reshape(-1)[order]
+        weight = flat_gates * keep.astype(jnp.float32)
+        out = _combine_gather(y.reshape(n_slots * capacity, d), flat_slot,
+                              tok, weight, T, d,
+                              valid=keep & (sid < n_slots)).astype(x.dtype)
     if "shared" in params:
         s = params["shared"]
         out = out + swiglu(x, s["w_gate"], s["w_up"], s["w_down"])

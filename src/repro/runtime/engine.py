@@ -9,9 +9,13 @@ with platform timing constants.
 
 It also provides `SlotBufferEngine`: the MoE forward computed through the
 bounded device slot buffer (`core.expert_buffer` + `models.moe.moe_slotbuf`)
-with the host-side TwoLevelLRU controlling swaps — the integration test that
-the TPU-adapted mechanism is numerically exact versus the fully-resident
-model whenever the runtime keeps the working set resident.
+with the host-side TwoLevelLRU controlling swaps. The fused hot path jits
+per-layer compute once, routes on device (pulling only a small expert mask
+to host), batches every layer's swap-ins into one donated device write, and
+issues predicted next-layer swap-ins BEFORE dispatching the current layer's
+FFN so JAX async dispatch overlaps transfer with compute — while staying
+bit-exact versus the fully-resident model computed through the same jitted
+functions whenever the runtime keeps the working set resident.
 """
 from __future__ import annotations
 
@@ -25,7 +29,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.cache import TwoLevelLRU
-from repro.core.expert_buffer import SlotTable, make_buffer, swap_in
+from repro.core.expert_buffer import (HostExpertStore, SlotTable, make_buffer,
+                                      swap_in, swap_in_many)
+from repro.core.prefetcher import Prefetcher, TransferLink
 from repro.core.trace import Sample, TraceLog
 from repro.models import moe as moe_mod
 from repro.models.layers import rms_norm, swiglu
@@ -216,18 +222,58 @@ def _attn_only_decode(p, cfg, spec, x, cache, cache_len):
 # Slot-buffer execution (device-side cache integration)
 # ---------------------------------------------------------------------------
 
+@dataclass
+class SlotPathStats:
+    """Per-engine counters for the slot-path benchmark."""
+    swap_calls: int = 0        # device swap dispatches (batched or per-expert)
+    swap_experts: int = 0      # experts actually transferred
+    prefetched: int = 0        # experts transferred ahead of demand
+    prefetch_hits: int = 0     # prefetched experts later demanded
+    demand_misses: int = 0     # experts swapped in on demand at layer entry
+    host_syncs: int = 0        # blocking device->host pulls
+    jit_calls: int = 0         # engine-issued jitted computation dispatches
+    steps: int = 0             # forward() invocations
+
+    def snapshot(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0)
+
+
 class SlotBufferEngine:
     """MoE forward through the bounded expert slot buffer.
 
     Host side: TwoLevelLRU + SlotTable decide residency; device side: slots
-    updated via dynamic_update_slice, MoE computed with `moe_slotbuf`.
-    With `ensure_resident=True` the runtime swaps in all required experts
-    before compute (recording would-be stalls) — outputs are then bit-exact
-    versus the fully-resident model.
+    updated via batched donated scatters (`swap_in_many`), MoE computed with
+    `moe_slotbuf`. The fused hot path (default):
+
+    - per-layer compute is jitted ONCE per layer shape (no per-layer
+      retrace) — one `pre` dispatch (attention + norm + on-device routing)
+      and one `ffn` dispatch per MoE layer;
+    - routing stays on device; only a (2, E) bool needed/predicted mask is
+      pulled to host per MoE layer;
+    - ALL missing experts of a layer swap in through ONE batched donated
+      write fed from pre-staged contiguous host views (`HostExpertStore`);
+    - predicted next-layer experts (pre-gating the next router on the
+      current hidden state) are issued BEFORE the current layer's FFN is
+      dispatched, so JAX async dispatch overlaps the transfer with compute;
+      speculative fills only ever take free slots or evict the cold
+      (low-reuse) tier — demand residency is never displaced by a guess.
+      Issued transfers are also accounted through the paper's
+      `core.prefetcher` link model (virtual time = MoE layer index).
+
+    Residency is guaranteed before each FFN dispatch, so outputs are
+    bit-exact versus the fully-resident model computed through the SAME
+    jitted functions (`reference_forward`). `fused=False` preserves the
+    pre-fused per-expert/per-op execution as the benchmark baseline.
     """
 
     def __init__(self, cfg: ModelConfig, params, model: Model,
-                 n_slots_per_layer: int):
+                 n_slots_per_layer: int, *, fused: bool = True,
+                 use_kernel: bool = False, prefetch: bool = True,
+                 link_bandwidth: float = 64e9):
         assert cfg.moe is not None
         self.cfg = cfg
         self.model = model
@@ -241,32 +287,311 @@ class SlotBufferEngine:
         self.buffer = make_buffer(cfg, self.n_slots, jnp.bfloat16)
         self.swap_count = 0
         self.would_stall = 0
+        self.fused = fused
+        self.use_kernel = use_kernel
+        self.prefetch_enabled = prefetch and fused
+        self.stats = SlotPathStats()
+        # per-absolute-layer params, sliced from the stacked tree ONCE
+        self._p = [_layer_params(model, params, i)
+                   for i in range(len(self.specs))]
+        # pre-staged contiguous host views of every layer's expert weights
+        self.store = HostExpertStore()
+        for li, i in enumerate(self.moe_layer_ids):
+            mp = self._p[i]["moe"]
+            self.store.add_layer(li, mp["w_gate"], mp["w_up"], mp["w_down"])
+        # transfer accounting through the paper's link/prefetcher model
+        # (virtual time: one unit per MoE layer dispatch)
+        self.link = TransferLink(bandwidth=link_bandwidth)
+        self.prefetcher = Prefetcher(self.link, float(cfg.expert_bytes()))
+        self._clock = 0.0
+        self._prefetch_pending: set = set()
+        self._fns: Dict[Any, Any] = {}     # jitted per-layer fns, keyed by spec
+        self._ident_map = jnp.arange(E, dtype=jnp.int32)
 
+    # -- jitted per-layer functions (compiled once per layer shape) ---------
+    @staticmethod
+    def _spec_key(spec: LayerSpec) -> LayerSpec:
+        # layer_idx does not affect compute; canonicalize so repeated layers
+        # share one trace
+        return LayerSpec(spec.kind, spec.window, spec.is_moe, 0)
+
+    def _embed_fn(self):
+        if "embed" not in self._fns:
+            model = self.model
+
+            def fn(params, tokens):
+                x = model.embed(params, tokens)
+                B, T = tokens.shape
+                positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+                return x, positions
+            self._fns["embed"] = jax.jit(fn)
+        return self._fns["embed"]
+
+    def _dense_fn(self, spec: LayerSpec):
+        key = ("dense", self._spec_key(spec))
+        if key not in self._fns:
+            cfg, cspec = self.cfg, self._spec_key(spec)
+            self._fns[key] = jax.jit(
+                lambda p, x, pos: layer_forward(p, cfg, cspec, x, pos))
+        return self._fns[key]
+
+    def _pre_fn(self, spec: LayerSpec, has_next: bool):
+        """Attention + norm + on-device routing (+ next-layer pre-gate)."""
+        key = ("pre", self._spec_key(spec), has_next)
+        if key not in self._fns:
+            cfg = self.cfg
+            cspec = self._spec_key(spec)
+            E, k = cfg.moe.num_experts, cfg.moe.top_k
+            from repro.models.transformer import _zc
+
+            def fn(p, x, positions, next_router):
+                stripped = {n: v for n, v in p.items()
+                            if n not in ("ffn_norm", "moe", "ffn",
+                                         "post_ffn_norm")}
+                spec_nf = LayerSpec(cspec.kind, cspec.window, False, 0)
+                x = layer_forward(stripped, cfg, spec_nf, x, positions)
+                h2 = rms_norm(x, p["ffn_norm"], cfg.norm_eps,
+                              zero_centered=_zc(cfg))
+                flat = h2.reshape(-1, x.shape[-1])
+                r = moe_mod.route(p["moe"]["router"], flat, k,
+                                  cfg.moe.router_norm_topk)
+                masks = jnp.zeros((2, E), jnp.bool_)
+                masks = masks.at[0, r.expert_ids.reshape(-1)].set(True)
+                if has_next:
+                    rn = moe_mod.route(next_router, flat, k,
+                                       cfg.moe.router_norm_topk)
+                    masks = masks.at[1, rn.expert_ids.reshape(-1)].set(True)
+                return x, flat, r, masks
+            self._fns[key] = jax.jit(fn)
+        return self._fns[key]
+
+    def _ffn_fn(self, spec: LayerSpec):
+        key = ("ffn", self._spec_key(spec))
+        if key not in self._fns:
+            cfg = self.cfg
+            use_kernel = self.use_kernel
+            from repro.models.transformer import _zc
+
+            def fn(p, slot_weights, slot_map, x, flat, r):
+                B, T, d = x.shape
+                out, _ = moe_mod.moe_slotbuf(
+                    p["moe"], slot_weights, slot_map, flat, cfg.moe,
+                    capacity=B * T * cfg.moe.top_k, router_out=r,
+                    use_kernel=use_kernel)
+                ff = out.reshape(B, T, d)
+                if "post_ffn_norm" in p:
+                    ff = rms_norm(ff, p["post_ffn_norm"], cfg.norm_eps,
+                                  zero_centered=_zc(cfg))
+                return x + ff
+            self._fns[key] = jax.jit(fn)
+        return self._fns[key]
+
+    def _next_router(self, li: int):
+        """Router weights of MoE layer li (device array), or None."""
+        if li >= len(self.moe_layer_ids):
+            return None
+        return self._p[self.moe_layer_ids[li]]["moe"]["router"]
+
+    # -- residency ----------------------------------------------------------
+    def ensure_resident(self, li: int, experts) -> int:
+        """Swap in ALL missing experts for MoE layer li in one batched
+        donated device write. Returns #experts swapped.
+
+        The full needed set is pinned while inserting so a later insert can
+        never evict an earlier-needed expert of the same layer; if the cache
+        is smaller than the working set the overflow experts simply stay
+        non-resident (their tokens drop via the sentinel slot) instead of
+        silently corrupting residents."""
+        keys = [(li, int(e)) for e in experts]
+        for key in keys:
+            self.cache.pin(key)
+        missing: List[int] = []
+        slots: List[int] = []
+        try:
+            for key in keys:
+                if self.cache.touch(key):
+                    if key in self._prefetch_pending:
+                        self._prefetch_pending.discard(key)
+                        self.stats.prefetch_hits += 1
+                    continue
+                self.would_stall += 1
+                self.stats.demand_misses += 1
+                self.prefetcher.demand(key, self._clock)
+                try:
+                    victim = self.cache.insert(key)
+                except RuntimeError:     # every resident expert is needed NOW
+                    continue
+                if victim is not None:
+                    self.table.release(*victim)
+                    self.prefetcher.forget(victim)
+                    self._prefetch_pending.discard(victim)
+                slots.append(self.table.assign(li, key[1]))
+                missing.append(key[1])
+        finally:
+            for key in keys:
+                self.cache.unpin(key)
+        if missing:
+            wg, wu, wd = self.store.gather(li, missing)
+            self.buffer = swap_in_many(self.buffer, slots, wg, wu, wd)
+            self.stats.swap_calls += 1
+            self.stats.swap_experts += len(missing)
+        self.swap_count += len(missing)
+        return len(missing)
+
+    def prefetch_layer(self, li: int, experts) -> int:
+        """Speculatively swap in predicted experts for a FUTURE layer.
+
+        Issued BEFORE the current layer's FFN dispatch so the (batched)
+        transfer overlaps compute. Guesses only take free slots or evict the
+        cold low-reuse tier — never the high tier holding demand residency.
+        Returns #experts issued."""
+        issued: List[int] = []
+        slots: List[int] = []
+        issued_keys: List[Tuple[int, int]] = []
+        try:
+            for e in experts:
+                key = (li, int(e))
+                if key in self.cache:
+                    continue
+                if self.cache.free_slots <= 0 and not any(
+                        k not in self.cache.pinned for k in self.cache.low):
+                    # no free slot and no evictable COLD victim: stopping
+                    # here (a) never displaces high-tier demand residency
+                    # for a guess and (b) never evicts this batch's own
+                    # pinned fills, which would stack two payloads onto one
+                    # slot inside a single batched swap
+                    break
+                victim = self.cache.insert(key, high=False)
+                if victim is not None:
+                    self.table.release(*victim)
+                    self.prefetcher.forget(victim)
+                    self._prefetch_pending.discard(victim)
+                # pin so a later insert in THIS batch cannot evict it
+                self.cache.pin(key)
+                issued_keys.append(key)
+                slots.append(self.table.assign(li, int(e)))
+                issued.append(int(e))
+                self.prefetcher.prefetch(key, self._clock)
+                self._prefetch_pending.add(key)
+        finally:
+            for key in issued_keys:
+                self.cache.unpin(key)
+        if issued:
+            wg, wu, wd = self.store.gather(li, issued)
+            self.buffer = swap_in_many(self.buffer, slots, wg, wu, wd)
+            self.stats.swap_calls += 1
+            self.stats.swap_experts += len(issued)
+            self.stats.prefetched += len(issued)
+        self.swap_count += len(issued)
+        return len(issued)
+
+    # -- forward ------------------------------------------------------------
+    def forward(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        """Full forward with slot-buffer MoE. tokens: (B, T) -> (B, T, d)."""
+        if not self.fused:
+            return self._forward_legacy(tokens)
+        self.stats.steps += 1
+        tokens = jnp.asarray(tokens, jnp.int32)
+        x, positions = self._embed_fn()(self.params, tokens)
+        self.stats.jit_calls += 1
+        li = 0
+        for i, spec in enumerate(self.specs):
+            p = self._p[i]
+            if not spec.is_moe:
+                x = self._dense_fn(spec)(p, x, positions)
+                self.stats.jit_calls += 1
+                continue
+            nxt = self._next_router(li + 1)
+            want_pred = self.prefetch_enabled and nxt is not None
+            x, flat, r, masks = self._pre_fn(spec, want_pred)(
+                p, x, positions, nxt if want_pred else None)
+            self.stats.jit_calls += 1
+            # ONE small host pull: (2, E) needed/predicted bool masks
+            masks_h = np.asarray(masks)
+            self.stats.host_syncs += 1
+            self._clock += 1.0
+            self.prefetcher.advance(self._clock)
+            needed = np.nonzero(masks_h[0])[0]
+            predicted = np.nonzero(masks_h[1])[0] if want_pred else []
+            # paper §3.3.1: tiers track the sweep — experts needed now or
+            # predicted next stay high, everything else (including idle
+            # residents of the current/next layer) demotes to the
+            # evict-first low tier (which is what speculative fills may take)
+            self.cache.retier(
+                [(li, int(e)) for e in needed]
+                + [(li + 1, int(e)) for e in predicted],
+                recent_layers=(), current_layer=li)
+            self.ensure_resident(li, needed)
+            if want_pred:
+                # issue next-layer swap-ins BEFORE this layer's FFN dispatch
+                self.prefetch_layer(li + 1, predicted)
+            slot_map = jnp.asarray(self.table.layer_slot_map(li))
+            x = self._ffn_fn(spec)(p, self.buffer, slot_map, x, flat, r)
+            self.stats.jit_calls += 1
+            li += 1
+        # next step's sweep restarts at layer 0: shield the first layer's
+        # residents from the step-boundary prefetches (paper §3.3.1)
+        self.cache.protect_early_layers(1)
+        return x
+
+    def reference_forward(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        """Fully-resident oracle through the SAME jitted functions: MoE
+        weights come straight from the stacked params with the identity
+        slot table — no buffer, no swaps, no cache. The slot path must match
+        this bitwise whenever the working set stays resident."""
+        tokens = jnp.asarray(tokens, jnp.int32)
+        x, positions = self._embed_fn()(self.params, tokens)
+        li = 0
+        for i, spec in enumerate(self.specs):
+            p = self._p[i]
+            if not spec.is_moe:
+                x = self._dense_fn(spec)(p, x, positions)
+                continue
+            # mirror forward()'s exact pre-fn variants so both paths run the
+            # IDENTICAL compiled computations up to the slot indirection
+            nxt = self._next_router(li + 1)
+            want_pred = self.prefetch_enabled and nxt is not None
+            x, flat, r, _ = self._pre_fn(spec, want_pred)(
+                p, x, positions, nxt if want_pred else None)
+            full = {"w_gate": p["moe"]["w_gate"], "w_up": p["moe"]["w_up"],
+                    "w_down": p["moe"]["w_down"]}
+            x = self._ffn_fn(spec)(p, full, self._ident_map, x, flat, r)
+            li += 1
+        return x
+
+    # -- pre-fused execution (benchmark baseline) ---------------------------
     def _expert_weights(self, li: int, e: int):
         p = _layer_params(self.model, self.params, self.moe_layer_ids[li])
         return (p["moe"]["w_gate"][e], p["moe"]["w_up"][e],
                 p["moe"]["w_down"][e])
 
-    def ensure_resident(self, li: int, experts) -> int:
-        """Swap in missing experts for MoE layer li. Returns #swaps."""
+    def _ensure_resident_seq(self, li: int, experts) -> int:
+        """Pre-fused swap path: one jitted dispatch + param-tree re-slice
+        per missing expert."""
         swaps = 0
         for e in experts:
             key = (li, int(e))
             if self.cache.touch(key):
                 continue
             self.would_stall += 1
+            self.stats.demand_misses += 1
             victim = self.cache.insert(key)
             if victim is not None:
                 self.table.release(*victim)
             slot = self.table.assign(li, int(e))
             wg, wu, wd = self._expert_weights(li, int(e))
             self.buffer = swap_in(self.buffer, slot, wg, wu, wd)
+            self.stats.swap_calls += 1
+            self.stats.swap_experts += 1
             swaps += 1
         self.swap_count += swaps
         return swaps
 
-    def forward(self, tokens: jnp.ndarray) -> jnp.ndarray:
-        """Full forward with slot-buffer MoE. tokens: (B, T) -> (B, T, d)."""
+    def _forward_legacy(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        """The pre-fused hot path, kept verbatim as the benchmark baseline:
+        eager per-op layer compute, host routing that pulls the full (T, k)
+        assignment tensor, and per-expert sequential swap-ins."""
+        self.stats.steps += 1
         cfg = self.cfg
         model = self.model
         x = model.embed(self.params, tokens)
@@ -290,7 +615,8 @@ class SlotBufferEngine:
             r = moe_mod.route(p["moe"]["router"], flat, cfg.moe.top_k,
                               cfg.moe.router_norm_topk)
             needed = sorted({int(e) for e in np.asarray(r.expert_ids).reshape(-1)})
-            self.ensure_resident(li, needed)
+            self.stats.host_syncs += 1
+            self._ensure_resident_seq(li, needed)
             slot_map = jnp.asarray(self.table.layer_slot_map(li))
             out, _ = moe_mod.moe_slotbuf(
                 p["moe"], self.buffer, slot_map, flat, cfg.moe,

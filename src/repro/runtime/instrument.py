@@ -1,0 +1,41 @@
+"""Device-dispatch accounting for the slot-path benchmark.
+
+`count_dispatches` wraps `jax.core.Primitive.bind` to count EAGER primitive
+executions — outside of jit, every bind is a separate XLA executable
+invocation, which is exactly the per-op dispatch overhead the fused slot
+path removes. Binds whose arguments are tracers (i.e. we are inside a jit
+trace, not executing) are excluded. Warm jitted calls go through the C++
+fast path and never reach Python `bind`; callers count those explicitly
+(the engine's `stats.jit_calls` / `stats.swap_calls` do exactly that), so
+
+    total device dispatches = counter.eager + jit_calls + swap_calls
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+
+import jax
+
+
+@dataclass
+class DispatchCount:
+    eager: int = 0
+
+
+@contextlib.contextmanager
+def count_dispatches():
+    """Context manager yielding a DispatchCount of eager primitive binds."""
+    counter = DispatchCount()
+    orig = jax.core.Primitive.bind
+
+    def bind(self, *args, **params):
+        if not any(isinstance(a, jax.core.Tracer) for a in args):
+            counter.eager += 1
+        return orig(self, *args, **params)
+
+    jax.core.Primitive.bind = bind
+    try:
+        yield counter
+    finally:
+        jax.core.Primitive.bind = orig

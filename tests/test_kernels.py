@@ -77,3 +77,56 @@ def test_slot_ffn_equals_expert_ffn_under_identity_mapping():
     a = ops.slot_ffn(x, ident, wg, wu, wd, interpret=True)
     b = ops.expert_ffn(x, wg, wu, wd, interpret=True)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# slot tables exercising the scalar-prefetch indirection for real:
+# non-identity permutations, partial occupancy (S > E, arbitrary slots), and
+# repeated lookups (several experts reading the SAME slot)
+SLOT_TABLES = [
+    ("reversed", 4, [3, 2, 1, 0]),
+    ("partial", 7, [5, 0, 6, 2]),
+    ("repeated", 3, [2, 0, 2, 1]),
+    ("all_same", 5, [3, 3, 3, 3]),
+]
+
+
+@pytest.mark.parametrize("name,S,table", SLOT_TABLES,
+                         ids=[t[0] for t in SLOT_TABLES])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_slot_ffn_indirection_tables(name, S, table, dtype):
+    """slot_ffn ≡ expert_ffn on pre-gathered weights ≡ einsum reference,
+    under permuted / partial / repeated-lookup slot tables."""
+    E, C, D, F = 4, 128, 64, 128
+    rng = np.random.default_rng(S * 31 + len(name))
+    x = jnp.asarray(rng.standard_normal((E, C, D)), dtype) * 0.5
+    sg = jnp.asarray(rng.standard_normal((S, D, F)), dtype) * 0.1
+    su = jnp.asarray(rng.standard_normal((S, D, F)), dtype) * 0.1
+    sd = jnp.asarray(rng.standard_normal((S, F, D)), dtype) * 0.1
+    soe = jnp.asarray(table, jnp.int32)
+    out = ops.slot_ffn(x, soe, sg, su, sd, interpret=True)
+    # the kernel's indirection must be EXACTLY a weight gather: same Pallas
+    # arithmetic on pre-gathered weights gives bit-identical output
+    via_gather = ops.expert_ffn(x, sg[soe], su[soe], sd[soe], interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(via_gather))
+    ref = ops.slot_ffn_ref(x, soe, sg, su, sd)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("C,F", [(96, 128), (200, 80), (40, 48)])
+def test_slot_ffn_non_tile_aligned_shapes(C, F):
+    """Capacities that do not divide the preferred 128 tile must still work
+    (the block picker falls back to a divisor; arbitrary shapes are legal in
+    interpret mode)."""
+    E, D, S = 3, 32, 5
+    rng = np.random.default_rng(C * F)
+    x = jnp.asarray(rng.standard_normal((E, C, D)), jnp.float32) * 0.5
+    sg = jnp.asarray(rng.standard_normal((S, D, F)), jnp.float32) * 0.1
+    su = jnp.asarray(rng.standard_normal((S, D, F)), jnp.float32) * 0.1
+    sd = jnp.asarray(rng.standard_normal((S, F, D)), jnp.float32) * 0.1
+    soe = jnp.asarray(rng.permutation(S)[:E], jnp.int32)
+    out = ops.slot_ffn(x, soe, sg, su, sd, interpret=True)
+    ref = ops.slot_ffn_ref(x, soe, sg, su, sd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
