@@ -113,6 +113,28 @@ class HostExpertStore:
         wg, wu, wd = self._layers[layer]
         return wg[idx], wu[idx], wd[idx]
 
+    def gather_many(self, keys) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Stack weights for (layer, expert) keys spanning SEVERAL layers.
+
+        This is what lets the multi-layer prefetch horizon fan speculative
+        fills across layers l+1..l+S while still issuing ONE batched device
+        swap (`swap_in_many`) for the whole window."""
+        assert keys, "gather_many needs at least one key"
+        parts = [[], [], []]
+        i = 0
+        n = len(keys)
+        while i < n:           # group consecutive same-layer keys per slice
+            j = i
+            while j < n and keys[j][0] == keys[i][0]:
+                j += 1
+            idx = np.asarray([e for _, e in keys[i:j]], np.int32)
+            for t, w in enumerate(self._layers[keys[i][0]]):
+                parts[t].append(w[idx])
+            i = j
+        if len(parts[0]) == 1:
+            return parts[0][0], parts[1][0], parts[2][0]
+        return tuple(np.concatenate(p, axis=0) for p in parts)
+
 
 class SlotTable:
     """Host-side mirror: (layer, expert) <-> slot assignments."""

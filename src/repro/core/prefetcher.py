@@ -103,6 +103,17 @@ class TransferLink:
                 return tr.done_t
         raise KeyError(f"transfer for {key} vanished from queue")
 
+    def cancel(self, key: Key) -> bool:
+        """Drop any queued transfer for `key` (an evicted expert's pending
+        fetch is moot). Returns True if something was removed."""
+        kept = [item for item in self._queue if item[2].key != key]
+        if len(kept) == len(self._queue):
+            return False
+        self._queue = kept
+        heapq.heapify(self._queue)
+        self.in_flight.pop(key, None)
+        return True
+
     def _find(self, key: Key) -> Optional[Transfer]:
         for _, _, tr in self._queue:
             if tr.key == key:
@@ -121,14 +132,25 @@ class Prefetcher:
     """Issues expert transfers and tracks readiness + observed bandwidth."""
 
     def __init__(self, link: TransferLink, expert_bytes: float,
-                 blocking_swap_out: bool = False):
+                 blocking_swap_out: bool = False,
+                 cancel_on_forget: bool = False):
         self.link = link
         self.expert_bytes = expert_bytes
         self.blocking_swap_out = blocking_swap_out
+        # True (the slot-path runtime): eviction cancels the key's pending
+        # transfer outright — stale completions must never repopulate
+        # ready_at, or the late-transfer stall signal corrupts. False (the
+        # simulator's historical semantics): an in-flight prefetch of an
+        # evicted expert still occupies the modeled link and re-lands via
+        # advance(), preserving the committed figure baselines.
+        self.cancel_on_forget = cancel_on_forget
         self.ready_at: Dict[Key, float] = {}
         self.issued: Dict[Key, Transfer] = {}
         self.n_prefetches = 0
         self.n_misses = 0
+        self.n_late_prefetches = 0       # prefetched, but demanded before done
+        self.n_unused_prefetches = 0     # prefetched, evicted without a demand
+        self._demanded: set = set()      # keys that saw a demand() call
         self._completed_seen = 0          # monotone index into link.completed
         self._pending: List[Transfer] = []  # completed but not yet surfaced
 
@@ -140,11 +162,22 @@ class Prefetcher:
         self.issued[key] = tr
         self.n_prefetches += 1
 
+    def prefetch_many(self, keys, now: float) -> None:
+        """Issue a speculative window of transfers in submission order.
+
+        Callers pass the multi-layer horizon's fills nearest-layer-first;
+        the link is FIFO within the prefetch priority class, so the expert
+        needed soonest also lands soonest (§3.4 queue discipline)."""
+        for key in keys:
+            self.prefetch(key, now)
+
     def demand(self, key: Key, now: float) -> float:
         """Miss path: fetch `key` at top priority; returns ready time."""
+        self._demanded.add(key)
         if key in self.ready_at:
             return self.ready_at[key]
         if key in self.issued:
+            self.n_late_prefetches += 1
             self.link.promote(key)
         else:
             tr = Transfer(key, self.expert_bytes, PRIO_MISS, now, kind="miss")
@@ -172,6 +205,13 @@ class Prefetcher:
         still = []
         for tr in self._pending:
             if tr.done_t <= t:
+                # under cancel_on_forget, surface only the EXACT transfer
+                # currently expected for the key (identity, not membership):
+                # a stale completion of a forgotten-then-reissued key must
+                # neither repopulate ready_at early nor orphan the live
+                # transfer's issued entry
+                if self.cancel_on_forget and self.issued.get(tr.key) is not tr:
+                    continue
                 if tr.key not in self.ready_at:
                     self._complete(tr.key, tr.done_t)
                     arrived.append(tr.key)
@@ -187,6 +227,36 @@ class Prefetcher:
     def is_ready(self, key: Key, now: float) -> bool:
         return key in self.ready_at and self.ready_at[key] <= now
 
-    def forget(self, key: Key) -> None:
-        """Expert evicted — future use must re-fetch."""
+    def note_use(self, key: Key) -> None:
+        """Record that a prefetched expert was actually consumed (cache hit
+        — no demand() ever fires for it), so a later eviction does not
+        misclassify it as an unused prefetch."""
+        self._demanded.add(key)
+
+    def forget(self, key: Key, count_unused: bool = True) -> None:
+        """Expert evicted — future use must re-fetch. An eviction of a
+        prefetched key that never saw a demand (whether the transfer
+        completed or is still queued/in flight) counts as an unused
+        prefetch (the controller's overfetch signal, §3.2.2) —
+        `count_unused=False` defers that call to the caller (`note_unused`)
+        when used-vs-unused is not yet decidable at eviction time.
+
+        With `cancel_on_forget` the issued entry, any still-queued
+        transfer, AND any drained-but-unsurfaced completion are dropped
+        too: a later demand for the re-evicted key must be a fresh miss,
+        and a stale completion must never repopulate ready_at for a
+        non-resident expert."""
+        if count_unused and (key in self.ready_at or key in self.issued) \
+                and key not in self._demanded:
+            self.n_unused_prefetches += 1
         self.ready_at.pop(key, None)
+        if self.cancel_on_forget:
+            self.issued.pop(key, None)
+            self.link.cancel(key)
+            self._pending = [tr for tr in self._pending if tr.key != key]
+        self._demanded.discard(key)
+
+    def note_unused(self, key: Key) -> None:
+        """Deferred verdict for a key forgotten with count_unused=False:
+        it was settled as never-used after all."""
+        self.n_unused_prefetches += 1

@@ -125,6 +125,24 @@ class StepSizeController:
         a = self.cfg.bandwidth_ema
         self.layer_time_est = (1 - a) * self.layer_time_est + a * seconds
 
+    # -- diagnostics ---------------------------------------------------------
+    def horizon(self, n_layers_remaining: int) -> int:
+        """Effective lookahead for the next dispatch: S clamped to what is
+        left of the layer sweep (predicting past the last MoE layer only
+        wastes pre-gate compute and link budget)."""
+        return int(max(0, min(self.s, n_layers_remaining)))
+
+    def snapshot(self) -> dict:
+        """Controller state for benchmarks / EXPERIMENTS records."""
+        return {
+            "s": self.s,
+            "stall_counter": self.stall_counter,
+            "overfetch_counter": self.overfetch_counter,
+            "bandwidth_est": self.bandwidth_est,
+            "layer_time_est": self.layer_time_est,
+            "s_history": list(self.s_history),
+        }
+
 
 def token_diversity(embeddings: np.ndarray, max_tokens: int = 256) -> float:
     """Cumulative Euclidean distance Dist(t) = sum_{i<j} ||v_i - v_j||

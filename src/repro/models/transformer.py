@@ -41,6 +41,22 @@ class LayerSpec(NamedTuple):
     layer_idx: int     # absolute depth index (first occurrence)
 
 
+# Parameter keys that belong to a layer's FFN half. The slot-path runtime
+# splits every layer here: attention/mixing (+ cache update) runs in one
+# jitted `pre` dispatch, the FFN through the slot buffer in another.
+FFN_PARAM_KEYS = ("ffn_norm", "moe", "ffn", "post_ffn_norm")
+
+
+def split_ffn_params(p, spec: LayerSpec):
+    """(attention-only params, FFN-stripped spec) for a layer param dict.
+
+    `layer_forward` / `layer_prefill` / `layer_decode` on the returned pair
+    compute exactly the layer's attention/mixing half (residual included)
+    and skip the FFN, which the caller dispatches separately."""
+    stripped = {k: v for k, v in p.items() if k not in FFN_PARAM_KEYS}
+    return stripped, LayerSpec(spec.kind, spec.window, False, spec.layer_idx)
+
+
 def build_layout(cfg: ModelConfig):
     """Layout: (prefix, unit, num_units, tail).
 

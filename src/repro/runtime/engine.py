@@ -16,10 +16,18 @@ issues predicted next-layer swap-ins BEFORE dispatching the current layer's
 FFN so JAX async dispatch overlaps transfer with compute — while staying
 bit-exact versus the fully-resident model computed through the same jitted
 functions whenever the runtime keeps the working set resident.
+
+`prefill`/`decode_step`/`generate` add KV-cached incremental decode: O(1)
+attention per step, an adaptive multi-layer prefetch horizon S (pre-gating
+the next S routers in one dispatch, ONE (S+1, E) mask pull per sync, and
+speculative execution of the S-layer window with verify-and-replay), with a
+`core.step_size.StepSizeController` closing the paper's stall/overfetch
+feedback loop from real runtime signals.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -32,11 +40,14 @@ from repro.core.cache import TwoLevelLRU
 from repro.core.expert_buffer import (HostExpertStore, SlotTable, make_buffer,
                                       swap_in, swap_in_many)
 from repro.core.prefetcher import Prefetcher, TransferLink
+from repro.core.step_size import StepSizeController
 from repro.core.trace import Sample, TraceLog
 from repro.models import moe as moe_mod
 from repro.models.layers import rms_norm, swiglu
 from repro.models.transformer import (LayerSpec, Model, layer_decode,
-                                      layer_forward)
+                                      layer_forward, layer_prefill,
+                                      split_ffn_params)
+from repro.runtime.instrument import Stopwatch
 from repro.runtime.sampler import sample
 from repro.simulator.events import RoutingTrace, StepTrace
 
@@ -165,7 +176,11 @@ class Engine:
             if collect:
                 for li, a in enumerate(assigns):
                     actual = sorted({int(e) for e in a.reshape(-1)})
-                    log.add(token_ids=tuple(int(t) for t in token_list[:64]),
+                    # LAST 64 ids: the window must slide with decoding, or
+                    # prompts >= 64 ids keep the features frozen at the
+                    # prompt prefix forever
+                    log.add(token_ids=tuple(int(t)
+                                            for t in token_list[-64:]),
                             layer_idx=li,
                             predicted_experts=(),
                             actual_experts=tuple(actual),
@@ -179,14 +194,21 @@ class Engine:
         cache_len = jnp.asarray(T, jnp.int32)
         tok = sample(logits, key, temperature)
         out.append(np.asarray(tok))
+        # decoded tokens extend the recorded context: each step's TraceLog /
+        # StepTrace entry must see the ids the model actually conditioned on,
+        # not the frozen prompt (predictor features drift otherwise)
+        token_list = np.concatenate([token_list,
+                                     np.asarray(tok).reshape(-1)])
         for step in range(1, n_steps):
             logits, caches, routers, hiddens = self._decode(
                 self.params, tok, caches, cache_len)
             cache_len = cache_len + 1
+            record_step(step, routers, hiddens)
             key = jax.random.fold_in(key, step)
             tok = sample(logits, key, temperature)
             out.append(np.asarray(tok))
-            record_step(step, routers, hiddens)
+            token_list = np.concatenate([token_list,
+                                         np.asarray(tok).reshape(-1)])
         return np.stack(out, axis=1), trace, log
 
 
@@ -211,11 +233,21 @@ def layer_decode_collect(p, cfg, spec, x, cache, cache_len, sink):
 
 def _attn_only_decode(p, cfg, spec, x, cache, cache_len):
     """The attention/mixing part of layer_decode (FFN stripped)."""
-    stripped = {k: v for k, v in p.items() if k not in ("ffn_norm", "moe",
-                                                        "ffn",
-                                                        "post_ffn_norm")}
-    spec_no_ffn = LayerSpec(spec.kind, spec.window, False, spec.layer_idx)
+    stripped, spec_no_ffn = split_ffn_params(p, spec)
     return layer_decode(stripped, cfg, spec_no_ffn, x, cache, cache_len)
+
+
+def _route_ffn_entry(p, cfg, x):
+    """Shared FFN-entry block of the jitted pre fns: ffn-norm the attention
+    output, flatten, route on device, build the (E,) needed mask.
+    Returns (flat, RouterOutput, needed)."""
+    from repro.models.transformer import _zc
+    h2 = rms_norm(x, p["ffn_norm"], cfg.norm_eps, zero_centered=_zc(cfg))
+    flat = h2.reshape(-1, x.shape[-1])
+    r = moe_mod.route(p["moe"]["router"], flat, cfg.moe.top_k,
+                      cfg.moe.router_norm_topk)
+    needed = jnp.zeros((cfg.moe.num_experts,), jnp.bool_)
+    return flat, r, needed.at[r.expert_ids.reshape(-1)].set(True)
 
 
 # ---------------------------------------------------------------------------
@@ -229,10 +261,13 @@ class SlotPathStats:
     swap_experts: int = 0      # experts actually transferred
     prefetched: int = 0        # experts transferred ahead of demand
     prefetch_hits: int = 0     # prefetched experts later demanded
+    late_hits: int = 0         # prefetch hits the link model says arrived late
     demand_misses: int = 0     # experts swapped in on demand at layer entry
     host_syncs: int = 0        # blocking device->host pulls
     jit_calls: int = 0         # engine-issued jitted computation dispatches
-    steps: int = 0             # forward() invocations
+    steps: int = 0             # forward() / decode_step invocations
+    spec_layers: int = 0       # MoE layers executed speculatively (no sync)
+    replays: int = 0           # speculative windows rolled back on mispredict
 
     def snapshot(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -240,6 +275,15 @@ class SlotPathStats:
     def reset(self) -> None:
         for f in dataclasses.fields(self):
             setattr(self, f.name, 0)
+
+
+@dataclass
+class DecodeState:
+    """KV/recurrent caches + position for incremental slot-path decode."""
+    caches: List[Any]            # one populated cache entry per absolute layer
+    cache_len: jnp.ndarray       # scalar int32: tokens already in the cache
+    pos: int = 0                 # host mirror of cache_len (max_seq guard
+                                 # without a device sync)
 
 
 class SlotBufferEngine:
@@ -273,11 +317,15 @@ class SlotBufferEngine:
     def __init__(self, cfg: ModelConfig, params, model: Model,
                  n_slots_per_layer: int, *, fused: bool = True,
                  use_kernel: bool = False, prefetch: bool = True,
-                 link_bandwidth: float = 64e9):
+                 link_bandwidth: float = 64e9, max_seq: int = 256,
+                 step_size: Optional[int] = None,
+                 controller: Optional[StepSizeController] = None,
+                 pregate_margin: int = 2):
         assert cfg.moe is not None
         self.cfg = cfg
         self.model = model
         self.params = params
+        self.max_seq = max_seq
         self.specs = _all_specs(model)
         self.moe_layer_ids = [i for i, s in enumerate(self.specs) if s.is_moe]
         L, E = len(self.moe_layer_ids), cfg.moe.num_experts
@@ -302,11 +350,40 @@ class SlotBufferEngine:
         # transfer accounting through the paper's link/prefetcher model
         # (virtual time: one unit per MoE layer dispatch)
         self.link = TransferLink(bandwidth=link_bandwidth)
-        self.prefetcher = Prefetcher(self.link, float(cfg.expert_bytes()))
+        self._expert_nbytes = float(cfg.expert_bytes())
+        self.prefetcher = Prefetcher(self.link, self._expert_nbytes,
+                                     cancel_on_forget=True)
         self._clock = 0.0
         self._prefetch_pending: set = set()
+        # speculative-window bookkeeping: layers whose FFN has dispatched
+        # but whose actual routing is not yet verified, and prefetched keys
+        # evicted mid-window (key -> link-model readiness at eviction) whose
+        # used/unused classification must wait for verification
+        self._window_layers: set = set()
+        self._evicted_spec: Dict[Tuple[int, int], bool] = {}
         self._fns: Dict[Any, Any] = {}     # jitted per-layer fns, keyed by spec
         self._ident_map = jnp.arange(E, dtype=jnp.int32)
+        # adaptive prefetch horizon (paper §3.2): fixed_s pins S for
+        # benchmarks/ablation; otherwise the controller's stall/overfetch
+        # feedback moves it at runtime
+        self.fixed_s = step_size
+        if controller is None:
+            controller = StepSizeController()
+            controller.bandwidth_est = link_bandwidth
+            # lookahead beyond the remaining sweep buys nothing: clamp the
+            # default controller to the model's own depth
+            controller.cfg = dataclasses.replace(
+                controller.cfg, s_max=min(controller.cfg.s_max, max(1, L - 1)))
+        self.controller = controller
+        # pre-gate over-selection: predict top-(k + margin) per token so
+        # near-boundary experts (the §3.2.1 cumulative-probability tail)
+        # prefetch too instead of forcing a replay when routing lands on them
+        self.pregate_margin = pregate_margin
+        self.swap_timer = Stopwatch()
+        # all MoE routers stacked (L, d, E) so the pre-gate fn can take any
+        # lookahead window as ONE device slice
+        self._router_stack = jnp.stack(
+            [self._p[i]["moe"]["router"] for i in self.moe_layer_ids])
 
     # -- jitted per-layer functions (compiled once per layer shape) ---------
     @staticmethod
@@ -342,21 +419,12 @@ class SlotBufferEngine:
             cfg = self.cfg
             cspec = self._spec_key(spec)
             E, k = cfg.moe.num_experts, cfg.moe.top_k
-            from repro.models.transformer import _zc
 
             def fn(p, x, positions, next_router):
-                stripped = {n: v for n, v in p.items()
-                            if n not in ("ffn_norm", "moe", "ffn",
-                                         "post_ffn_norm")}
-                spec_nf = LayerSpec(cspec.kind, cspec.window, False, 0)
+                stripped, spec_nf = split_ffn_params(p, cspec)
                 x = layer_forward(stripped, cfg, spec_nf, x, positions)
-                h2 = rms_norm(x, p["ffn_norm"], cfg.norm_eps,
-                              zero_centered=_zc(cfg))
-                flat = h2.reshape(-1, x.shape[-1])
-                r = moe_mod.route(p["moe"]["router"], flat, k,
-                                  cfg.moe.router_norm_topk)
-                masks = jnp.zeros((2, E), jnp.bool_)
-                masks = masks.at[0, r.expert_ids.reshape(-1)].set(True)
+                flat, r, needed = _route_ffn_entry(p, cfg, x)
+                masks = jnp.zeros((2, E), jnp.bool_).at[0].set(needed)
                 if has_next:
                     rn = moe_mod.route(next_router, flat, k,
                                        cfg.moe.router_norm_topk)
@@ -392,8 +460,135 @@ class SlotBufferEngine:
             return None
         return self._p[self.moe_layer_ids[li]]["moe"]["router"]
 
+    # -- jitted decode-path functions ---------------------------------------
+    def _embed_decode_fn(self):
+        if "embed_decode" not in self._fns:
+            model = self.model
+
+            def fn(params, tok, cache_len):
+                pos = jnp.broadcast_to(jnp.asarray(cache_len).reshape(-1, 1),
+                                       (tok.shape[0], 1))
+                return model.embed(params, tok[:, None], positions=pos)
+            self._fns["embed_decode"] = jax.jit(fn)
+        return self._fns["embed_decode"]
+
+    def _logits_fn(self):
+        if "logits" not in self._fns:
+            model = self.model
+            self._fns["logits"] = jax.jit(
+                lambda params, x: model.logits(params, x[:, -1]))
+        return self._fns["logits"]
+
+    def _dense_prefill_fn(self, spec: LayerSpec):
+        key = ("dense_prefill", self._spec_key(spec))
+        if key not in self._fns:
+            cfg, cspec, max_seq = self.cfg, self._spec_key(spec), self.max_seq
+            self._fns[key] = jax.jit(
+                lambda p, x, pos: layer_prefill(p, cfg, cspec, x, pos,
+                                                max_seq))
+        return self._fns[key]
+
+    def _dense_decode_fn(self, spec: LayerSpec):
+        key = ("dense_decode", self._spec_key(spec))
+        if key not in self._fns:
+            cfg, cspec = self.cfg, self._spec_key(spec)
+            self._fns[key] = jax.jit(
+                lambda p, x, c, n: layer_decode(p, cfg, cspec, x, c, n))
+        return self._fns[key]
+
+    def _pre_prefill_fn(self, spec: LayerSpec):
+        """Prefill pre half of a MoE layer: attention + KV-cache population +
+        norm + on-device routing. One dispatch; no host pulls."""
+        key = ("pre_prefill", self._spec_key(spec))
+        if key not in self._fns:
+            cfg, cspec, max_seq = self.cfg, self._spec_key(spec), self.max_seq
+
+            def fn(p, x, positions):
+                stripped, spec_nf = split_ffn_params(p, cspec)
+                x, cache = layer_prefill(stripped, cfg, spec_nf, x, positions,
+                                         max_seq)
+                flat, r, needed = _route_ffn_entry(p, cfg, x)
+                return x, flat, r, needed, cache
+            self._fns[key] = jax.jit(fn)
+        return self._fns[key]
+
+    def _pre_decode_fn(self, spec: LayerSpec):
+        """Decode pre half: O(1) attention against the KV cache + cache
+        update + norm + on-device routing. One dispatch; no host pulls."""
+        key = ("pre_decode", self._spec_key(spec))
+        if key not in self._fns:
+            cfg, cspec = self.cfg, self._spec_key(spec)
+
+            def fn(p, x, cache, cache_len):
+                stripped, spec_nf = split_ffn_params(p, cspec)
+                x, new_cache = layer_decode(stripped, cfg, spec_nf, x, cache,
+                                            cache_len)
+                flat, r, needed = _route_ffn_entry(p, cfg, x)
+                return x, flat, r, needed, new_cache
+            self._fns[key] = jax.jit(fn)
+        return self._fns[key]
+
+    def _pregate_fn(self, n_next: int):
+        """Pre-gate the next `n_next` routers on the current hidden state in
+        ONE dispatch, returning a single (n_next + 1, E) bool mask: row 0 is
+        the layer's actual needed set, rows 1.. the speculative horizon."""
+        key = ("pregate", n_next)
+        if key not in self._fns:
+            cfg = self.cfg
+            E = cfg.moe.num_experts
+            k_pred = min(E, cfg.moe.top_k + self.pregate_margin)
+
+            def fn(flat, needed, routers):
+                rows = [needed[None]]
+                for j in range(n_next):
+                    rn = moe_mod.route(routers[j], flat, k_pred,
+                                       cfg.moe.router_norm_topk)
+                    m = jnp.zeros((E,), jnp.bool_)
+                    m = m.at[rn.expert_ids.reshape(-1)].set(True)
+                    rows.append(m[None])
+                return jnp.concatenate(rows, axis=0)
+            self._fns[key] = jax.jit(fn)
+        return self._fns[key]
+
+    # -- adaptive horizon ----------------------------------------------------
+    def _s_eff(self) -> int:
+        return self.fixed_s if self.fixed_s is not None else self.controller.s
+
+    def _horizon(self, li: int) -> int:
+        """Lookahead from MoE layer li, clamped to the remaining sweep."""
+        if not self.prefetch_enabled:
+            return 0
+        remaining = len(self.moe_layer_ids) - (li + 1)
+        if self.fixed_s is not None:
+            return max(0, min(self.fixed_s, remaining))
+        return self.controller.horizon(remaining)
+
+    def _router_slice(self, li: int, s: int) -> jnp.ndarray:
+        """(s, d, E) device slice of the routers for MoE layers li+1..li+s."""
+        return self._router_stack[li + 1: li + 1 + s]
+
+    def _sync_masks_dev(self, li: int, s: int, flat, needed_dev):
+        """Device-side (s+1, E) sync mask block: row 0 the layer's actual
+        needed set, rows 1.. the pre-gated horizon. At s == 0 the pregate
+        dispatch is pure overhead — the needed mask alone suffices."""
+        if s == 0:
+            return needed_dev[None]
+        self.stats.jit_calls += 1
+        return self._pregate_fn(s)(flat, needed_dev,
+                                   self._router_slice(li, s))
+
+    @staticmethod
+    def _decode_sync_rows(li: int, s: int, rows: np.ndarray):
+        """Pulled (s+1, E) sync block -> (needed expert ids, predicted sets
+        keyed by MoE layer)."""
+        needed = np.nonzero(rows[0])[0]
+        predicted = {li + 1 + j: {int(e) for e in np.nonzero(rows[1 + j])[0]}
+                     for j in range(s)}
+        return needed, predicted
+
     # -- residency ----------------------------------------------------------
-    def ensure_resident(self, li: int, experts) -> int:
+    def ensure_resident(self, li: int, experts, *,
+                        speculative: bool = False) -> int:
         """Swap in ALL missing experts for MoE layer li in one batched
         donated device write. Returns #experts swapped.
 
@@ -401,7 +596,13 @@ class SlotBufferEngine:
         never evict an earlier-needed expert of the same layer; if the cache
         is smaller than the working set the overflow experts simply stay
         non-resident (their tokens drop via the sentinel slot) instead of
-        silently corrupting residents."""
+        silently corrupting residents.
+
+        `speculative=True` (the decode window demanding its PREDICTED set):
+        prediction accounting — prefetch hits, late-transfer stalls,
+        overfetches — is deferred to `_settle_prediction` when the layer's
+        ACTUAL routing is verified; touching a predicted key here must not
+        declare the prediction correct."""
         keys = [(li, int(e)) for e in experts]
         for key in keys:
             self.cache.pin(key)
@@ -410,80 +611,140 @@ class SlotBufferEngine:
         try:
             for key in keys:
                 if self.cache.touch(key):
-                    if key in self._prefetch_pending:
+                    if not speculative and key in self._prefetch_pending:
                         self._prefetch_pending.discard(key)
-                        self.stats.prefetch_hits += 1
+                        self._settle_hit(
+                            key, self.prefetcher.is_ready(key, self._clock))
                     continue
-                self.would_stall += 1
-                self.stats.demand_misses += 1
-                self.prefetcher.demand(key, self._clock)
+                if not speculative:
+                    self.would_stall += 1
+                    self.stats.demand_misses += 1
+                    self.controller.record_stall()
+                    self.prefetcher.demand(key, self._clock)
                 try:
                     victim = self.cache.insert(key)
                 except RuntimeError:     # every resident expert is needed NOW
                     continue
+                if speculative:
+                    # a predicted expert the prefetch window couldn't fit:
+                    # fill it now, but book it as speculation — verification
+                    # settles it as a hit or an overfetch, never as a
+                    # demand-miss stall (no token is known to need it yet)
+                    self.stats.prefetched += 1
+                    self.prefetcher.prefetch(key, self._clock)
+                    self._prefetch_pending.add(key)
                 if victim is not None:
-                    self.table.release(*victim)
-                    self.prefetcher.forget(victim)
-                    self._prefetch_pending.discard(victim)
+                    self._evict(victim)
                 slots.append(self.table.assign(li, key[1]))
                 missing.append(key[1])
         finally:
             for key in keys:
                 self.cache.unpin(key)
         if missing:
-            wg, wu, wd = self.store.gather(li, missing)
-            self.buffer = swap_in_many(self.buffer, slots, wg, wu, wd)
-            self.stats.swap_calls += 1
+            self._dispatch_swap(slots, self.store.gather(li, missing))
             self.stats.swap_experts += len(missing)
         self.swap_count += len(missing)
         return len(missing)
 
-    def prefetch_layer(self, li: int, experts) -> int:
-        """Speculatively swap in predicted experts for a FUTURE layer.
+    def _settle_hit(self, key: Tuple[int, int], ready: bool, *,
+                    forgotten: bool = False) -> None:
+        """A prefetched expert was consumed. `ready`: whether the link model
+        had delivered its bytes when the consuming dispatch happened — if
+        not, that's a stall in the paper's timing (§3.2.2): deeper lookahead
+        would have bought the transfer time. `forgotten`: the key was
+        already evicted — marking it used now would poison the NEXT
+        eviction's unused-prefetch verdict."""
+        self.stats.prefetch_hits += 1
+        if not forgotten:
+            self.prefetcher.note_use(key)
+        if not ready:
+            self.stats.late_hits += 1
+            self.controller.record_stall()
 
-        Issued BEFORE the current layer's FFN dispatch so the (batched)
-        transfer overlaps compute. Guesses only take free slots or evict the
-        cold low-reuse tier — never the high tier holding demand residency.
-        Returns #experts issued."""
-        issued: List[int] = []
+    def _evict(self, victim: Tuple[int, int]) -> None:
+        """Release a victim's slot; an evicted never-demanded prefetch is the
+        controller's overfetch signal (§3.2.2) — unless the victim's layer is
+        mid-speculative-window: its FFN already dispatched against the
+        then-resident slot, so whether the prefetch was USED is only known at
+        verification. Park the link-readiness snapshot for
+        `_settle_prediction` instead of guessing."""
+        self.table.release(*victim)
+        deferred = False
+        if victim in self._prefetch_pending:
+            self._prefetch_pending.discard(victim)
+            if victim[0] in self._window_layers:
+                self._evicted_spec[victim] = self.prefetcher.is_ready(
+                    victim, self._clock)
+                deferred = True
+            else:
+                self.controller.record_overfetch()
+        self.prefetcher.forget(victim, count_unused=not deferred)
+
+    def _dispatch_swap(self, slots: List[int], weights) -> None:
+        """One batched donated device write; host wall time feeds the
+        controller's bandwidth estimate C_s."""
+        before = self.swap_timer.elapsed
+        with self.swap_timer.section():
+            self.buffer = swap_in_many(self.buffer, slots, *weights)
+        self.stats.swap_calls += 1
+        self.controller.update_bandwidth(
+            len(slots) * self._expert_nbytes,
+            self.swap_timer.elapsed - before)
+
+    def prefetch_layer(self, li: int, experts) -> int:
+        """Speculatively swap in predicted experts for ONE future layer
+        (single-layer window; see `prefetch_window`)."""
+        return self.prefetch_window([(li, experts)])
+
+    def prefetch_window(self, plan) -> int:
+        """Fan speculative swap-ins across a multi-layer horizon in ONE
+        batched donated device write.
+
+        `plan`: [(layer, experts)] ordered nearest layer first, so fills for
+        the layer needed soonest take slots (and link slots) first. Issued
+        BEFORE the current layer's FFN dispatch so the batched transfer
+        overlaps multiple layers of compute. Guesses only take free slots or
+        evict the cold low-reuse tier — never the high tier holding demand
+        residency. Returns #experts issued."""
         slots: List[int] = []
         issued_keys: List[Tuple[int, int]] = []
         try:
-            for e in experts:
-                key = (li, int(e))
-                if key in self.cache:
-                    continue
-                if self.cache.free_slots <= 0 and not any(
-                        k not in self.cache.pinned for k in self.cache.low):
-                    # no free slot and no evictable COLD victim: stopping
-                    # here (a) never displaces high-tier demand residency
-                    # for a guess and (b) never evicts this batch's own
-                    # pinned fills, which would stack two payloads onto one
-                    # slot inside a single batched swap
+            for li, experts in plan:
+                stop = False
+                for e in experts:
+                    key = (li, int(e))
+                    if key in self.cache:
+                        continue
+                    if self.cache.free_slots <= 0 and not any(
+                            k not in self.cache.pinned
+                            for k in self.cache.low):
+                        # no free slot and no evictable COLD victim: stopping
+                        # here (a) never displaces high-tier demand residency
+                        # for a guess and (b) never evicts this batch's own
+                        # pinned fills, which would stack two payloads onto
+                        # one slot inside a single batched swap
+                        stop = True
+                        break
+                    victim = self.cache.insert(key, high=False)
+                    if victim is not None:
+                        self._evict(victim)
+                    # pin so a later insert in THIS batch cannot evict it
+                    self.cache.pin(key)
+                    issued_keys.append(key)
+                    slots.append(self.table.assign(li, int(e)))
+                    self._prefetch_pending.add(key)
+                if stop:
                     break
-                victim = self.cache.insert(key, high=False)
-                if victim is not None:
-                    self.table.release(*victim)
-                    self.prefetcher.forget(victim)
-                    self._prefetch_pending.discard(victim)
-                # pin so a later insert in THIS batch cannot evict it
-                self.cache.pin(key)
-                issued_keys.append(key)
-                slots.append(self.table.assign(li, int(e)))
-                issued.append(int(e))
-                self.prefetcher.prefetch(key, self._clock)
-                self._prefetch_pending.add(key)
+            self.prefetcher.prefetch_many(issued_keys, self._clock)
         finally:
             for key in issued_keys:
                 self.cache.unpin(key)
-        if issued:
-            wg, wu, wd = self.store.gather(li, issued)
-            self.buffer = swap_in_many(self.buffer, slots, wg, wu, wd)
-            self.stats.swap_calls += 1
-            self.stats.swap_experts += len(issued)
-            self.stats.prefetched += len(issued)
-        self.swap_count += len(issued)
-        return len(issued)
+        if issued_keys:
+            self._dispatch_swap(slots, self.store.gather_many(issued_keys))
+            self.stats.swap_experts += len(issued_keys)
+            self.stats.prefetched += len(issued_keys)
+        self.swap_count += len(issued_keys)
+        return len(issued_keys)
 
     # -- forward ------------------------------------------------------------
     def forward(self, tokens: jnp.ndarray) -> jnp.ndarray:
@@ -559,6 +820,331 @@ class SlotBufferEngine:
             li += 1
         return x
 
+    # -- incremental decode (KV-cached) -------------------------------------
+    def _settle_prediction(self, li: int, needed: set,
+                           ready_at_dispatch: Optional[Dict] = None) -> None:
+        """Actual routing for layer li is now known: every still-outstanding
+        prefetch for it settles as a hit (used — with a late-transfer stall
+        if the link model says the bytes weren't there yet) or as an
+        overfetch (§3.2.2). Runs at sync layers (before `ensure_resident`)
+        and at speculative-window verification; the latter passes the
+        readiness snapshot taken when the layer's FFN DISPATCHED — judging
+        lateness at verification time would grant deep windows S extra
+        virtual layers of grace and mute the stall signal."""
+        for k in [k for k in self._prefetch_pending if k[0] == li]:
+            self._prefetch_pending.discard(k)
+            if k[1] in needed:
+                ready = (ready_at_dispatch.get(k, False)
+                         if ready_at_dispatch is not None
+                         else self.prefetcher.is_ready(k, self._clock))
+                self._settle_hit(k, ready)
+            else:
+                self.controller.record_overfetch()
+        # prefetches evicted mid-window: classified with the readiness the
+        # link model reported when their slot was still live
+        for k in [k for k in self._evicted_spec if k[0] == li]:
+            was_ready = self._evicted_spec.pop(k)
+            if k[1] in needed:
+                self._settle_hit(k, was_ready, forgotten=True)
+            else:
+                self.prefetcher.note_unused(k)
+                self.controller.record_overfetch()
+
+    def _sync_moe_layer(self, li: int, needed: np.ndarray,
+                        predicted: Dict[int, set]) -> None:
+        """Host-side residency work at a sync layer: tier maintenance, demand
+        swap-ins for the actual needed set, and the speculative multi-layer
+        prefetch fan-out — all issued BEFORE the FFN dispatch."""
+        self._settle_prediction(li, {int(e) for e in needed})
+        self.cache.retier(
+            [(li, int(e)) for e in needed]
+            + [(lj, int(e)) for lj, es in predicted.items() for e in es],
+            recent_layers=(), current_layer=li)
+        self.ensure_resident(li, needed)
+        if predicted:
+            self.prefetch_window(
+                [(lj, sorted(es)) for lj, es in sorted(predicted.items())])
+
+    def prefill(self, tokens) -> Tuple[jnp.ndarray, DecodeState]:
+        """Run the prompt through the slot path, populating per-layer KV /
+        recurrent caches. Returns (last-token logits (B, V), DecodeState).
+
+        Same per-layer-shape jitted structure as `forward` (pre = attention
+        + cache population + on-device routing; ffn = `moe_slotbuf`), plus
+        the adaptive horizon: each sync pulls ONE (S+1, E) mask and fans
+        speculative swap-ins across layers l+1..l+S in one batched write."""
+        assert self.fused, "incremental decode requires the fused runtime"
+        tokens = jnp.asarray(tokens, jnp.int32)
+        B, T = tokens.shape
+        assert T <= self.max_seq, f"prompt {T} exceeds max_seq {self.max_seq}"
+        self.stats.steps += 1
+        x, positions = self._embed_fn()(self.params, tokens)
+        self.stats.jit_calls += 1
+        caches: List[Any] = []
+        li = 0
+        for i, spec in enumerate(self.specs):
+            p = self._p[i]
+            if not spec.is_moe:
+                x, c = self._dense_prefill_fn(spec)(p, x, positions)
+                self.stats.jit_calls += 1
+                caches.append(c)
+                continue
+            x, flat, r, needed_dev, c = self._pre_prefill_fn(spec)(
+                p, x, positions)
+            caches.append(c)
+            self.stats.jit_calls += 1
+            s = self._horizon(li)
+            masks = self._sync_masks_dev(li, s, flat, needed_dev)
+            masks_h = np.asarray(masks)      # ONE (S+1, E) blocking pull
+            self.stats.host_syncs += 1
+            self._clock += 1.0
+            self.prefetcher.advance(self._clock)
+            needed, predicted = self._decode_sync_rows(li, s, masks_h)
+            self._sync_moe_layer(li, needed, predicted)
+            slot_map = jnp.asarray(self.table.layer_slot_map(li))
+            x = self._ffn_fn(spec)(p, self.buffer, slot_map, x, flat, r)
+            self.stats.jit_calls += 1
+            li += 1
+        self.cache.protect_early_layers(
+            max(1, min(self._s_eff(), len(self.moe_layer_ids))))
+        logits = self._logits_fn()(self.params, x)
+        self.stats.jit_calls += 1
+        return logits, DecodeState(caches, jnp.asarray(T, jnp.int32),
+                           pos=int(T))
+
+    def decode_step(self, tok, state: DecodeState
+                    ) -> Tuple[jnp.ndarray, DecodeState]:
+        """One KV-cached decode step: O(1) attention per layer, MoE through
+        the slot buffer, and S-layer speculative execution between host
+        syncs. tok: (B,) int32. Returns (logits (B, V), state).
+
+        A *sync* MoE layer pulls one (S+1, E) mask (actual routing + the
+        pre-gated next-S prediction) and fans speculative swap-ins across
+        layers l+1..l+S. The next S MoE layers then execute WITHOUT any
+        device->host pull: their FFNs dispatch against the predicted
+        residency, while their actual needed masks accumulate on device.
+        The next sync pulls those masks together with its own (still one
+        blocking pull) and verifies needed ⊆ resident-at-dispatch for every
+        speculative layer; a misprediction rolls x and the caches back to
+        the first wrong layer and replays it as a sync layer (the stall
+        path). Outputs are therefore ALWAYS bit-exact versus
+        `reference_decode_step` through the same jitted functions — the
+        horizon only moves how often the host blocks."""
+        assert self.fused, "incremental decode requires the fused runtime"
+        assert state.pos < self.max_seq, (
+            f"decode past max_seq={self.max_seq} would silently wrap the KV "
+            "ring buffer; raise max_seq at engine construction")
+        t0 = time.perf_counter()
+        self.stats.steps += 1
+        tok = jnp.asarray(tok, jnp.int32)
+        # fresh state: the input DecodeState stays valid (branching several
+        # continuations off one saved state must not share cache writes)
+        caches, clen = list(state.caches), state.cache_len
+        x = self._embed_decode_fn()(self.params, tok, clen)
+        self.stats.jit_calls += 1
+
+        predicted: Dict[int, set] = {}   # li -> predicted expert set
+        # pending: (li, abs_i, needed_dev, slot_snap, ready_snap) per
+        # speculatively-dispatched MoE layer — slot_snap/ready_snap capture
+        # residency and link readiness AT FFN DISPATCH for verification
+        pending: List[tuple] = []
+        ckpt: Dict[int, tuple] = {}      # abs_i -> (x_in, old_cache)
+        self._window_layers.clear()
+        self._evicted_spec.clear()
+
+        def replay_from(fail_idx: int) -> Tuple[int, int, jnp.ndarray]:
+            """Roll back to the first mis-speculated layer (§3.4 stall)."""
+            plj, pabs = pending[fail_idx][0], pending[fail_idx][1]
+            self.stats.replays += 1
+            for k, (_, old_c) in ckpt.items():
+                if k >= pabs:
+                    caches[k] = old_c
+            x_r = ckpt[pabs][0]
+            # mid-window evictions parked for rolled-back layers: their
+            # consuming dispatch is being discarded, so the transfer WAS
+            # wasted — settle as overfetch now, or a re-prefetch after
+            # replay would double-settle the stale entry as a hit
+            for k in [k for k in self._evicted_spec if k[0] >= plj]:
+                del self._evicted_spec[k]
+                self.prefetcher.note_unused(k)
+                self.controller.record_overfetch()
+            predicted.clear()
+            pending.clear()
+            ckpt.clear()
+            self._window_layers.clear()
+            return pabs, plj, x_r
+
+        def verify(masks_h: np.ndarray) -> int:
+            """First pending index whose actual routing escaped the residency
+            it was dispatched with, or -1. Masks of layers past the first
+            failure are stale (their inputs get replayed) — stop there."""
+            for idx, (plj, _, _, snap, rsnap) in enumerate(pending):
+                needed = np.nonzero(masks_h[idx])[0]
+                self._settle_prediction(plj, {int(e) for e in needed},
+                                        ready_at_dispatch=rsnap)
+                if any(snap[int(e)] < 0 for e in needed):
+                    return idx
+            return -1
+
+        def pull_and_verify(extra) -> Tuple[np.ndarray, int]:
+            """ONE blocking pull of the window's accumulated needed masks
+            (+ optional sync-layer rows), then verification. On success the
+            window commits (pending/ckpt clear); returns (sync_rows, -1).
+            On mispredict returns (stale rows, fail index)."""
+            mats = []
+            if pending:
+                mats.append(jnp.stack([p[2] for p in pending]))
+            if extra is not None:
+                mats.append(extra)
+            stacked = mats[0] if len(mats) == 1 else jnp.concatenate(mats, 0)
+            masks_h = np.asarray(stacked)
+            self.stats.host_syncs += 1
+            npend = len(pending)
+            fail = verify(masks_h[:npend])
+            if fail < 0:
+                pending.clear()
+                ckpt.clear()
+                self._window_layers.clear()
+            return masks_h[npend:], fail
+
+        i, li = 0, 0
+        n_specs = len(self.specs)
+        while True:
+            if i == n_specs:
+                if pending:
+                    _, fail = pull_and_verify(None)
+                    if fail >= 0:
+                        i, li, x = replay_from(fail)
+                        continue
+                break
+            spec = self.specs[i]
+            p = self._p[i]
+            if not spec.is_moe:
+                if pending:
+                    ckpt[i] = (x, caches[i])
+                x, caches[i] = self._dense_decode_fn(spec)(p, x, caches[i],
+                                                           clen)
+                self.stats.jit_calls += 1
+                i += 1
+                continue
+            x_in, old_c = x, caches[i]
+            x2, flat, r, needed_dev, c2 = self._pre_decode_fn(spec)(
+                p, x_in, old_c, clen)
+            self.stats.jit_calls += 1
+            self._clock += 1.0
+            self.prefetcher.advance(self._clock)
+            if li in predicted:
+                # ---- speculative layer: no host pull ----------------------
+                ckpt[i] = (x_in, old_c)
+                caches[i] = c2
+                self.ensure_resident(li, sorted(predicted[li]),
+                                     speculative=True)
+                snap = self.table.layer_slot_map(li)
+                ready_snap = {k: self.prefetcher.is_ready(k, self._clock)
+                              for k in self._prefetch_pending if k[0] == li}
+                pending.append((li, i, needed_dev, snap, ready_snap))
+                self._window_layers.add(li)
+                x = self._ffn_fn(spec)(p, self.buffer, jnp.asarray(snap),
+                                       x2, flat, r)
+                self.stats.jit_calls += 1
+                self.stats.spec_layers += 1
+                i += 1
+                li += 1
+                continue
+            # ---- sync layer: ONE blocking pull for verify + routing + S ---
+            s = self._horizon(li)
+            masks = self._sync_masks_dev(li, s, flat, needed_dev)
+            sync, fail = pull_and_verify(masks)
+            if fail >= 0:
+                i, li, x = replay_from(fail)
+                continue
+            needed, pred = self._decode_sync_rows(li, s, sync)
+            predicted.clear()
+            predicted.update(pred)
+            self._sync_moe_layer(li, needed, predicted)
+            caches[i] = c2
+            slot_map = jnp.asarray(self.table.layer_slot_map(li))
+            x = self._ffn_fn(spec)(p, self.buffer, slot_map, x2, flat, r)
+            self.stats.jit_calls += 1
+            i += 1
+            li += 1
+
+        self.cache.protect_early_layers(
+            max(1, min(self._s_eff(), len(self.moe_layer_ids))))
+        logits = self._logits_fn()(self.params, x)
+        self.stats.jit_calls += 1
+        self.controller.update_layer_time(
+            (time.perf_counter() - t0) / max(len(self.specs), 1))
+        return logits, DecodeState(caches, clen + 1, pos=state.pos + 1)
+
+    # -- fully-resident decode oracle ---------------------------------------
+    def reference_prefill(self, tokens) -> Tuple[jnp.ndarray, DecodeState]:
+        """Prefill through the SAME jitted functions with the identity slot
+        table over the raw stacked weights — no buffer, no swaps."""
+        tokens = jnp.asarray(tokens, jnp.int32)
+        B, T = tokens.shape
+        x, positions = self._embed_fn()(self.params, tokens)
+        caches: List[Any] = []
+        for i, spec in enumerate(self.specs):
+            p = self._p[i]
+            if not spec.is_moe:
+                x, c = self._dense_prefill_fn(spec)(p, x, positions)
+                caches.append(c)
+                continue
+            x, flat, r, _, c = self._pre_prefill_fn(spec)(p, x, positions)
+            caches.append(c)
+            full = {"w_gate": p["moe"]["w_gate"], "w_up": p["moe"]["w_up"],
+                    "w_down": p["moe"]["w_down"]}
+            x = self._ffn_fn(spec)(p, full, self._ident_map, x, flat, r)
+        logits = self._logits_fn()(self.params, x)
+        return logits, DecodeState(caches, jnp.asarray(T, jnp.int32),
+                           pos=int(T))
+
+    def reference_decode_step(self, tok, state: DecodeState
+                              ) -> Tuple[jnp.ndarray, DecodeState]:
+        """One decode step of the fully-resident oracle. The slot path must
+        match this bitwise — under eviction churn, replay included."""
+        assert state.pos < self.max_seq, (
+            f"decode past max_seq={self.max_seq} would silently wrap the KV "
+            "ring buffer; raise max_seq at engine construction")
+        tok = jnp.asarray(tok, jnp.int32)
+        caches, clen = list(state.caches), state.cache_len
+        x = self._embed_decode_fn()(self.params, tok, clen)
+        for i, spec in enumerate(self.specs):
+            p = self._p[i]
+            if not spec.is_moe:
+                x, caches[i] = self._dense_decode_fn(spec)(p, x, caches[i],
+                                                           clen)
+                continue
+            x2, flat, r, _, c2 = self._pre_decode_fn(spec)(p, x, caches[i],
+                                                           clen)
+            caches[i] = c2
+            full = {"w_gate": p["moe"]["w_gate"], "w_up": p["moe"]["w_up"],
+                    "w_down": p["moe"]["w_down"]}
+            x = self._ffn_fn(spec)(p, full, self._ident_map, x2, flat, r)
+        logits = self._logits_fn()(self.params, x)
+        return logits, DecodeState(caches, clen + 1, pos=state.pos + 1)
+
+    def generate(self, tokens, n_steps: int, temperature: float = 0.0,
+                 key: Optional[jax.Array] = None,
+                 reference: bool = False) -> np.ndarray:
+        """Prefill + n_steps incremental decode steps through the slot path.
+        tokens: (B, T). Returns generated ids (B, n_steps). Greedy by
+        default; sampling follows `Engine.generate`'s key schedule so the
+        two runtimes are comparable token-for-token."""
+        key = key if key is not None else jax.random.PRNGKey(17)
+        do_prefill = self.reference_prefill if reference else self.prefill
+        do_step = self.reference_decode_step if reference else self.decode_step
+        logits, state = do_prefill(tokens)
+        tok = sample(logits, key, temperature)
+        out = [np.asarray(tok)]
+        for step in range(1, n_steps):
+            logits, state = do_step(tok, state)
+            key = jax.random.fold_in(key, step)
+            tok = sample(logits, key, temperature)
+            out.append(np.asarray(tok))
+        return np.stack(out, axis=1)
+
     # -- pre-fused execution (benchmark baseline) ---------------------------
     def _expert_weights(self, li: int, e: int):
         p = _layer_params(self.model, self.params, self.moe_layer_ids[li])
@@ -605,9 +1191,7 @@ class SlotBufferEngine:
                 x = layer_forward(p, cfg, spec, x, positions)
                 continue
             # attention part
-            stripped = {k: v for k, v in p.items()
-                        if k not in ("ffn_norm", "moe", "ffn", "post_ffn_norm")}
-            spec_nf = LayerSpec(spec.kind, spec.window, False, spec.layer_idx)
+            stripped, spec_nf = split_ffn_params(p, spec)
             x = layer_forward(stripped, cfg, spec_nf, x, positions)
             # route on host to learn required experts, then ensure residency
             h2 = rms_norm(x, p["ffn_norm"], cfg.norm_eps, zero_centered=_zc(cfg))

@@ -13,6 +13,7 @@ fast path and never reach Python `bind`; callers count those explicitly
 from __future__ import annotations
 
 import contextlib
+import time
 from dataclasses import dataclass
 
 import jax
@@ -39,3 +40,31 @@ def count_dispatches():
         yield counter
     finally:
         jax.core.Primitive.bind = orig
+
+
+@dataclass
+class Stopwatch:
+    """Tiny wall-clock section timer feeding the step-size controller.
+
+    The engine times swap dispatches (-> `update_bandwidth`) and whole
+    decode steps (-> `update_layer_time`). Host wall time around an async
+    dispatch under-reports true transfer latency, but tracks it
+    monotonically — exactly what the controller's EWMA needs as a signal,
+    without inserting blocking `block_until_ready` barriers into the hot
+    path."""
+    elapsed: float = 0.0
+    calls: int = 0
+
+    @contextlib.contextmanager
+    def section(self):
+        t0 = time.perf_counter()
+        try:
+            yield self
+        finally:
+            self.elapsed += time.perf_counter() - t0
+            self.calls += 1
+
+    def take(self) -> float:
+        """Return accumulated seconds and reset."""
+        e, self.elapsed, self.calls = self.elapsed, 0.0, 0
+        return e

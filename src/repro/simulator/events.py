@@ -45,7 +45,8 @@ Key = Tuple[int, int]
 class StepTrace:
     """Routing observations for one decode step (from real execution)."""
     step_idx: int
-    token_ids: np.ndarray          # (T,) int — context ids (predictor feature)
+    token_ids: np.ndarray          # (T_ctx,) int — context ids at this step
+                                   # (prompt + tokens decoded so far)
     assignments: List[np.ndarray]  # per MoE layer: (T, k) expert ids
     hidden_pooled: np.ndarray      # (L_moe, d) mean hidden state per MoE layer
     embeddings: Optional[np.ndarray] = None  # (T, d) token embeds (diversity)
