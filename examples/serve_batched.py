@@ -1,16 +1,50 @@
 """End-to-end serving driver: continuous batching over a Poisson request
 stream sharing one expert cache, with ExpertFlow policy comparison (the
-paper's deployment shape). See also --workload {poisson,bursty,mixed}.
+paper's deployment shape) — on BOTH backends: the latency simulator and the
+real slot-path engine (same Request/Scheduler/ServingReport surface).
 
     PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py --backend engine
+    PYTHONPATH=src python examples/serve_batched.py --requests 16 --batch 8
+
+Any flag you pass overrides the demo defaults below; flags you omit keep
+them. With no --backend, the demo runs the simulator first and the real
+engine second.
 """
 import sys
 
-sys.argv = [sys.argv[0], "--arch", "qwen1.5-moe-a2.7b", "--requests", "8",
-            "--batch", "4", "--max-new", "8", "--platform", "a6000",
-            "--workload", "poisson"]
+from repro.launch.serve import main
 
-from repro.launch.serve import main  # noqa: E402
+DEMO_DEFAULTS = {
+    "--arch": "qwen1.5-moe-a2.7b",
+    "--requests": "8",
+    "--batch": "4",
+    "--max-new": "8",
+    "--platform": "a6000",
+    "--workload": "poisson",
+}
+
+
+def _argv_with_defaults(extra=()):
+    """User argv wins; demo values only fill flags the user omitted."""
+    user = sys.argv[1:]
+    # both "--flag value" and "--flag=value" forms count as user-supplied
+    given = {a.split("=", 1)[0] for a in user if a.startswith("--")}
+    argv = list(user) + list(extra)
+    for flag, value in DEMO_DEFAULTS.items():
+        if flag not in given:
+            argv += [flag, value]
+    return argv
+
 
 if __name__ == "__main__":
-    main()
+    prog = sys.argv[0]
+    flags = {a.split("=", 1)[0] for a in sys.argv[1:] if a.startswith("--")}
+    if "--backend" in flags:
+        sys.argv = [prog] + _argv_with_defaults()
+        main()
+    else:
+        for backend in ("sim", "engine"):
+            print(f"=== backend: {backend} ===")
+            sys.argv = [prog] + _argv_with_defaults(("--backend", backend))
+            main()

@@ -135,6 +135,17 @@ class RequestMetrics:
         return self.finish_s - self.arrival_s
 
 
+def request_metrics(r) -> RequestMetrics:
+    """Build the SLO record from any served request object carrying the
+    canonical `runtime.request.Request` lifecycle fields (the real-engine
+    path and the simulator's trace-replaying subclass both do)."""
+    return RequestMetrics(request_id=r.request_id, arrival_s=r.arrival_s,
+                          admitted_s=r.admitted_s,
+                          first_token_s=r.first_token_s,
+                          finish_s=r.finish_s, n_tokens=len(r.output),
+                          prompt_len=r.prompt_len)
+
+
 @dataclass
 class ServingReport:
     """Multi-request serving run: per-iteration stalls + per-request SLOs."""

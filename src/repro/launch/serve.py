@@ -3,13 +3,21 @@
     PYTHONPATH=src python -m repro.launch.serve --arch deepseek-v2-lite \
         --requests 8 --max-new 12 --platform a6000 --workload poisson
 
-Runs the real reduced-config model once per request (routing traces from
-actual JAX execution on workload-generated prompts), trains the forest
-predictor on the collected traces, then replays the request population —
-with its arrival pattern — through the multi-tenant serving simulator:
-requests share one expert cache, one host->device link, and one adaptive
-step-size controller under continuous batching. Reports per-policy
-TTFT / TPOT p50/p99, queueing delay, and stall latencies.
+Two backends behind ONE Request/Scheduler/Report surface:
+
+- ``--backend sim`` (default): runs the real reduced-config model once per
+  request (routing traces from actual JAX execution on workload-generated
+  prompts), trains the forest predictor on the collected traces, then
+  replays the request population — with its arrival pattern — through the
+  multi-tenant serving simulator under each policy, with platform timing
+  constants. Reports modeled TTFT / TPOT / queueing / stall latencies.
+- ``--backend engine``: serves the SAME workload's prompts directly on the
+  real `SlotBufferEngine` via `runtime.serving.ServingEngine` — batched
+  KV-cached decode through the shared expert slot buffer, adaptive
+  prefetch horizon, working-set-capped admission — and reports measured
+  wall-clock TTFT / TPOT / throughput.
+
+Both emit the same `core.metrics.ServingReport`.
 """
 from __future__ import annotations
 
@@ -39,9 +47,45 @@ def _pad_to_bucket(toks: np.ndarray, bucket: int = 16) -> np.ndarray:
     return np.concatenate([toks, np.zeros(padded - T, toks.dtype)])
 
 
+def _serve_engine(args, cfg, specs, rng) -> None:
+    """--backend engine: the request population on the real slot-path
+    runtime under continuous batching."""
+    from repro.runtime.engine import SlotBufferEngine
+    from repro.runtime.request import Request
+    from repro.runtime.serving import EngineServingConfig, ServingEngine
+
+    requests = []
+    for spec_r in specs:
+        n_steps = max(2, min(spec_r.decode_len, args.max_new))
+        toks = _pad_to_bucket(prompt_tokens(spec_r, cfg.vocab_size, rng))
+        requests.append(Request(
+            prompt=toks.astype(np.int32), max_new_tokens=n_steps,
+            temperature=args.temperature, arrival_s=spec_r.arrival_s,
+            request_id=spec_r.request_id))
+    max_seq = max(r.prompt_len for r in requests) + args.max_new + 8
+    eng = Engine(cfg, max_seq=max_seq)
+    slots = max(2, int(cfg.moe.num_experts * args.capacity_frac))
+    sb = SlotBufferEngine(cfg, eng.params, eng.model,
+                          n_slots_per_layer=slots, max_seq=max_seq)
+    srv = ServingEngine(sb, EngineServingConfig(max_batch=args.batch))
+    rep = srv.serve(requests)
+    s = rep.summary()
+    print(f"engine backend: slots/layer={slots} batch={args.batch} "
+          f"S={sb.controller.s}")
+    print(f"  {'engine':14s} tput={s['throughput_tok_s']:8.1f}tok/s "
+          f"ttft_p50={s['ttft_p50_s']*1e3:8.3f}ms "
+          f"ttft_p99={s['ttft_p99_s']*1e3:8.3f}ms "
+          f"tpot_p50={s['tpot_p50_s']*1e3:7.3f}ms "
+          f"tpot_p99={s['tpot_p99_s']*1e3:7.3f}ms "
+          f"occ={s['mean_occupancy']:.2f} "
+          f"deferred={srv.batcher.stats.admission_deferred}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-v2-lite")
+    ap.add_argument("--backend", default="sim", choices=("sim", "engine"),
+                    help="latency simulator vs the real slot-path engine")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4,
                     help="continuous-batching slots (max batch)")
@@ -51,6 +95,8 @@ def main() -> None:
     ap.add_argument("--capacity-frac", type=float, default=0.6)
     ap.add_argument("--workload", default="poisson",
                     choices=list(WORKLOAD_PATTERNS))
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="engine backend: per-request sampling temperature")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.requests < 1:
@@ -69,12 +115,17 @@ def main() -> None:
     print(f"capacity plan ({full_cfg.name} on {hw.name}): "
           f"{cap_plan.summary()}")
 
-    eng = Engine(cfg, max_seq=256)
     rng = np.random.default_rng(args.seed)
-
-    # --- collect a real routing trace per request -------------------------
     specs = make_workload(args.workload, args.requests, seed=args.seed,
                           mean_decode=args.max_new)
+
+    if args.backend == "engine":
+        _serve_engine(args, cfg, specs, rng)
+        return
+
+    eng = Engine(cfg, max_seq=256)
+
+    # --- collect a real routing trace per request -------------------------
     requests = []
     all_logs = TraceLog()
     for spec_r in specs:

@@ -345,10 +345,15 @@ def mla_decode(params, x: jnp.ndarray, latent_cache, pe_cache, cache_len, *,
     c_new = rms_norm(kv_a[..., :R], params["kv_a_norm"], norm_eps)
     pe_new = rope(kv_a[..., R:][..., None, :], positions, rope_theta)
     idx = jnp.asarray(cache_len, jnp.int32)
-    latent_cache = jax.lax.dynamic_update_slice_in_dim(latent_cache, c_new,
-                                                       idx, axis=1)
-    pe_cache = jax.lax.dynamic_update_slice_in_dim(pe_cache, pe_new, idx,
-                                                   axis=1)
+    if idx.ndim:                              # (B,): per-row cache positions
+        rows = jnp.arange(B)
+        latent_cache = latent_cache.at[rows, idx].set(c_new[:, 0])
+        pe_cache = pe_cache.at[rows, idx].set(pe_new[:, 0])
+    else:
+        latent_cache = jax.lax.dynamic_update_slice_in_dim(latent_cache,
+                                                           c_new, idx, axis=1)
+        pe_cache = jax.lax.dynamic_update_slice_in_dim(pe_cache, pe_new, idx,
+                                                       axis=1)
 
     # query
     if "wq_a" in params:
@@ -374,7 +379,8 @@ def mla_decode(params, x: jnp.ndarray, latent_cache, pe_cache, cache_len, *,
                       pe_cache.astype(jnp.float32))
     s = (s_nope + s_pe) * scale
     S = latent_cache.shape[1]
-    valid = jnp.arange(S)[None, :] < (idx + 1)
+    n_valid = (idx + 1).reshape(-1, 1) if idx.ndim else (idx + 1)
+    valid = jnp.arange(S)[None, :] < n_valid
     s = jnp.where(valid[:, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhs,bsr->bhr", p, latent_cache.astype(jnp.float32))

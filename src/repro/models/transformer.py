@@ -337,7 +337,13 @@ def layer_prefill(p, cfg: ModelConfig, spec: LayerSpec, x: jnp.ndarray,
 
 def layer_decode(p, cfg: ModelConfig, spec: LayerSpec, x: jnp.ndarray,
                  cache, cache_len, *, src_len=None):
-    """One-token layer step. x: (B, 1, d). Returns (x, new_cache)."""
+    """One-token layer step. x: (B, 1, d). Returns (x, new_cache).
+
+    `cache_len` may be a scalar (all rows at one position — the single-
+    request decode path) or a (B,) int32 vector (continuous batching: each
+    row sits at its own position; KV insertion and attention masking are
+    then per-row).
+    """
     p = gather_for_compute(p)
     B = x.shape[0]
     h = rms_norm(x, p["pre_norm"], cfg.norm_eps, zero_centered=_zc(cfg))
@@ -360,10 +366,17 @@ def layer_decode(p, cfg: ModelConfig, spec: LayerSpec, x: jnp.ndarray,
                 q = rope(q, positions, cfg.rope_theta)
             k, v = attn_mod.gqa_project_kv(p["attn"], h, positions,
                                            cfg.rope_theta, cfg.norm_eps)
-            kc = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k, jnp.asarray(slot, jnp.int32), axis=1)
-            vc = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v, jnp.asarray(slot, jnp.int32), axis=1)
+            if jnp.asarray(cache_len).ndim:      # (B,): per-row ring slots
+                rows = jnp.arange(B)
+                kc = cache["k"].at[rows, jnp.asarray(slot, jnp.int32)].set(
+                    k[:, 0])
+                vc = cache["v"].at[rows, jnp.asarray(slot, jnp.int32)].set(
+                    v[:, 0])
+            else:
+                kc = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k, jnp.asarray(slot, jnp.int32), axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v, jnp.asarray(slot, jnp.int32), axis=1)
             valid = jnp.minimum(cache_len + 1, size)
             mix = attn_mod.decode_attention(
                 q, kc, vc, valid, window=0,

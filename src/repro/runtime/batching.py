@@ -5,15 +5,62 @@ decode batch in a free slot, and leave at completion — freeing the slot for
 the next waiting request. The scheduler is engine-agnostic: it operates on a
 `step_fn(batch_tokens) -> next_tokens` plus admission callbacks, so both the
 real engine and the latency simulator reuse it.
+
+Admission is working-set aware (the ROADMAP adaptive-S item): with a
+`WorkingSetAdmission` policy, `admit` consults the SHARED
+`StepSizeController` — the same instance the engine/simulator feeds with
+stall/overfetch/bandwidth signals — and each waiting request's predicted
+per-layer expert working set, and stops admitting once the co-batched
+working set would outgrow what the cache can hold plus what the link can
+stream within the current lookahead S. A transiently-exceeded cap cannot
+starve anyone: the queue head is always admitted into an empty batch, and
+head-of-line blocking means retirements eventually drain to that state.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence
 
-import numpy as np
-
+from repro.core.step_size import StepSizeController
 from repro.runtime.request import Request
+
+
+@dataclass
+class WorkingSetAdmission:
+    """Expert working-set admission cap over one shared expert cache.
+
+    `budget()` = cache slots per MoE layer + experts the host->device link
+    can stream within the controller's current lookahead window (S layers of
+    compute at the controller's bandwidth/layer-time estimates) — i.e. the
+    residency the runtime can actually sustain per layer. A request's cost
+    is its `predicted_ws` (predicted distinct experts per layer) when the
+    submitter estimated one, else `default_ws` (top_k: the floor any decode
+    row demands).
+    """
+    controller: StepSizeController
+    slots_per_layer: int
+    expert_bytes: float = 0.0      # 0 disables the streamable term
+    default_ws: float = 2.0
+    headroom: float = 1.0          # scales the budget (tests / tuning knob)
+
+    def working_set(self, req: Request) -> float:
+        if req.predicted_ws is not None:
+            return float(req.predicted_ws)
+        return float(self.default_ws)
+
+    def budget(self) -> float:
+        snap = self.controller.snapshot()
+        streamable = 0.0
+        if self.expert_bytes > 0:
+            streamable = (snap["bandwidth_est"] * snap["layer_time_est"]
+                          * max(snap["s"], 1)) / self.expert_bytes
+        return self.headroom * (self.slots_per_layer + streamable)
+
+    def admits(self, req: Request, active: Sequence[Request]) -> bool:
+        if not active:
+            return True            # no-starvation guarantee
+        total = sum(self.working_set(r) for r in active)
+        return total + self.working_set(req) <= self.budget()
 
 
 @dataclass
@@ -22,6 +69,7 @@ class BatcherStats:
     completed: int = 0
     decode_iterations: int = 0
     occupancy_sum: float = 0.0
+    admission_deferred: int = 0    # admit() passes blocked by the cap
 
     @property
     def mean_occupancy(self) -> float:
@@ -31,8 +79,10 @@ class BatcherStats:
 class ContinuousBatcher:
     """Slot-based continuous batching over a fixed max batch size."""
 
-    def __init__(self, max_batch: int):
+    def __init__(self, max_batch: int,
+                 admission: Optional[WorkingSetAdmission] = None):
         self.max_batch = max_batch
+        self.admission = admission
         self.waiting: List[Request] = []
         self.active: Dict[int, Request] = {}   # slot -> request
         self.free_slots = list(range(max_batch))
@@ -45,10 +95,17 @@ class ContinuousBatcher:
               now: Optional[float] = None) -> List[Request]:
         """Move waiting requests into free slots (prefill happens here).
         With `now`, only requests that have arrived (`arrival_s <= now`)
-        are admitted — the serving simulator's open-loop admission gate."""
+        are admitted — the serving simulator's open-loop admission gate.
+        With an admission policy, stop (head-of-line, preserving FIFO
+        order) once the co-batched expert working set would exceed the
+        shared cache's sustainable budget."""
         admitted = []
         while self.waiting and self.free_slots:
             if now is not None and self.waiting[0].arrival_s > now:
+                break
+            if self.admission is not None and not self.admission.admits(
+                    self.waiting[0], list(self.active.values())):
+                self.stats.admission_deferred += 1
                 break
             req = self.waiting.pop(0)
             slot = self.free_slots.pop(0)

@@ -237,17 +237,28 @@ def _attn_only_decode(p, cfg, spec, x, cache, cache_len):
     return layer_decode(stripped, cfg, spec_no_ffn, x, cache, cache_len)
 
 
-def _route_ffn_entry(p, cfg, x):
+def _route_ffn_entry(p, cfg, x, active=None):
     """Shared FFN-entry block of the jitted pre fns: ffn-norm the attention
     output, flatten, route on device, build the (E,) needed mask.
-    Returns (flat, RouterOutput, needed)."""
+    Returns (flat, RouterOutput, needed).
+
+    `active` (continuous batching): (B,) bool — the needed mask is the UNION
+    over active rows only, so idle slots' garbage rows cannot demand swaps.
+    All rows still flow through the FFN; inactive rows' outputs are ignored
+    by the caller (and their non-resident experts fall to the dead sentinel
+    slot inside `moe_slotbuf`)."""
     from repro.models.transformer import _zc
     h2 = rms_norm(x, p["ffn_norm"], cfg.norm_eps, zero_centered=_zc(cfg))
     flat = h2.reshape(-1, x.shape[-1])
     r = moe_mod.route(p["moe"]["router"], flat, cfg.moe.top_k,
                       cfg.moe.router_norm_topk)
-    needed = jnp.zeros((cfg.moe.num_experts,), jnp.bool_)
-    return flat, r, needed.at[r.expert_ids.reshape(-1)].set(True)
+    E = cfg.moe.num_experts
+    needed = jnp.zeros((E,), jnp.bool_)
+    ids = r.expert_ids
+    if active is not None:
+        # inactive rows scatter out of range and drop from the union
+        ids = jnp.where(active[:, None], ids, E)
+    return flat, r, needed.at[ids.reshape(-1)].set(True, mode="drop")
 
 
 # ---------------------------------------------------------------------------
@@ -279,11 +290,26 @@ class SlotPathStats:
 
 @dataclass
 class DecodeState:
-    """KV/recurrent caches + position for incremental slot-path decode."""
+    """KV/recurrent caches + position for incremental slot-path decode.
+
+    Two shapes of state share this class:
+    - single-stream (`prefill`): `cache_len` is a scalar int32 and `pos` an
+      int — every batch row decodes in lockstep at one position;
+    - batched serving (`alloc_decode_state` + `prefill_into`): `cache_len`
+      is a (B,) int32 vector, `pos` its (B,) host mirror, and `active` a
+      (B,) host bool mask of occupied slots. Rows advance independently;
+      inactive rows still flow through compute (static shapes) but are
+      masked out of routing demand, sampling, and the max_seq guard.
+    """
     caches: List[Any]            # one populated cache entry per absolute layer
-    cache_len: jnp.ndarray       # scalar int32: tokens already in the cache
-    pos: int = 0                 # host mirror of cache_len (max_seq guard
-                                 # without a device sync)
+    cache_len: jnp.ndarray       # () or (B,) int32: tokens already cached
+    pos: Any = 0                 # host mirror of cache_len (max_seq guard
+                                 # without a device sync); int or (B,) array
+    active: Optional[np.ndarray] = None   # (B,) bool; None = single-stream
+
+    @property
+    def batched(self) -> bool:
+        return self.active is not None
 
 
 class SlotBufferEngine:
@@ -512,39 +538,52 @@ class SlotBufferEngine:
             self._fns[key] = jax.jit(fn)
         return self._fns[key]
 
-    def _pre_decode_fn(self, spec: LayerSpec):
+    def _pre_decode_fn(self, spec: LayerSpec, batched: bool = False):
         """Decode pre half: O(1) attention against the KV cache + cache
-        update + norm + on-device routing. One dispatch; no host pulls."""
-        key = ("pre_decode", self._spec_key(spec))
+        update + norm + on-device routing. One dispatch; no host pulls.
+
+        `batched` (continuous batching): the fn additionally takes an
+        `active` (B,) bool mask — cache_len is then per-row and the needed
+        mask is the union over active rows only — so one call still serves
+        the whole co-batched decode iteration."""
+        key = ("pre_decode", self._spec_key(spec), batched)
         if key not in self._fns:
             cfg, cspec = self.cfg, self._spec_key(spec)
 
-            def fn(p, x, cache, cache_len):
+            def fn(p, x, cache, cache_len, active=None):
                 stripped, spec_nf = split_ffn_params(p, cspec)
                 x, new_cache = layer_decode(stripped, cfg, spec_nf, x, cache,
                                             cache_len)
-                flat, r, needed = _route_ffn_entry(p, cfg, x)
+                flat, r, needed = _route_ffn_entry(p, cfg, x, active)
                 return x, flat, r, needed, new_cache
             self._fns[key] = jax.jit(fn)
         return self._fns[key]
 
-    def _pregate_fn(self, n_next: int):
+    def _pregate_fn(self, n_next: int, batched: bool = False):
         """Pre-gate the next `n_next` routers on the current hidden state in
         ONE dispatch, returning a single (n_next + 1, E) bool mask: row 0 is
-        the layer's actual needed set, rows 1.. the speculative horizon."""
-        key = ("pregate", n_next)
+        the layer's actual needed set, rows 1.. the speculative horizon.
+
+        `batched`: idle batch slots are masked out of the union (their rows
+        scatter out of range, mode="drop"), so one host sync still covers
+        the whole co-batched decode iteration without garbage rows inflating
+        the predicted working set."""
+        key = ("pregate", n_next, batched)
         if key not in self._fns:
             cfg = self.cfg
             E = cfg.moe.num_experts
             k_pred = min(E, cfg.moe.top_k + self.pregate_margin)
 
-            def fn(flat, needed, routers):
+            def fn(flat, needed, routers, active=None):
                 rows = [needed[None]]
                 for j in range(n_next):
                     rn = moe_mod.route(routers[j], flat, k_pred,
                                        cfg.moe.router_norm_topk)
+                    ids = rn.expert_ids
+                    if active is not None:
+                        ids = jnp.where(active[:, None], ids, E)
                     m = jnp.zeros((E,), jnp.bool_)
-                    m = m.at[rn.expert_ids.reshape(-1)].set(True)
+                    m = m.at[ids.reshape(-1)].set(True, mode="drop")
                     rows.append(m[None])
                 return jnp.concatenate(rows, axis=0)
             self._fns[key] = jax.jit(fn)
@@ -567,13 +606,18 @@ class SlotBufferEngine:
         """(s, d, E) device slice of the routers for MoE layers li+1..li+s."""
         return self._router_stack[li + 1: li + 1 + s]
 
-    def _sync_masks_dev(self, li: int, s: int, flat, needed_dev):
+    def _sync_masks_dev(self, li: int, s: int, flat, needed_dev,
+                        active_dev=None):
         """Device-side (s+1, E) sync mask block: row 0 the layer's actual
         needed set, rows 1.. the pre-gated horizon. At s == 0 the pregate
-        dispatch is pure overhead — the needed mask alone suffices."""
+        dispatch is pure overhead — the needed mask alone suffices.
+        `active_dev`: (B,) bool for batched serving (idle rows masked)."""
         if s == 0:
             return needed_dev[None]
         self.stats.jit_calls += 1
+        if active_dev is not None:
+            return self._pregate_fn(s, batched=True)(
+                flat, needed_dev, self._router_slice(li, s), active_dev)
         return self._pregate_fn(s)(flat, needed_dev,
                                    self._router_slice(li, s))
 
@@ -912,6 +956,51 @@ class SlotBufferEngine:
         return logits, DecodeState(caches, jnp.asarray(T, jnp.int32),
                            pos=int(T))
 
+    # -- batched serving state (continuous batching over one engine) --------
+    def alloc_decode_state(self, batch: int) -> DecodeState:
+        """Empty batched DecodeState with `batch` request slots: zeroed
+        per-layer caches, per-row cache positions, all slots idle. Requests
+        enter via `prefill_into` and leave via `retire_slot`; the decode
+        batch shape stays static so the jitted step never retraces."""
+        from repro.models.transformer import init_layer_cache
+        caches = [init_layer_cache(self.cfg, spec, batch, self.max_seq,
+                                   self.model.dtype)
+                  for spec in self.specs]
+        return DecodeState(caches, jnp.zeros((batch,), jnp.int32),
+                           pos=np.zeros(batch, np.int64),
+                           active=np.zeros(batch, bool))
+
+    def prefill_into(self, state: DecodeState, slot: int, tokens
+                     ) -> jnp.ndarray:
+        """Admit a request: run its prompt through the slot path (seeding
+        shared-cache residency) and write the resulting KV/recurrent caches
+        into batch row `slot` of `state` IN PLACE. Returns the prompt's
+        last-token logits (1, V) for sampling the first output token.
+
+        tokens: (1, T) int32. The prefill itself is single-row (prompts of
+        different lengths can't share one dispatch); only decode iterations
+        are batched — the paper's continuous-batching regime."""
+        assert state.batched, "prefill_into requires an alloc_decode_state"
+        assert not state.active[slot], f"slot {slot} is still occupied"
+        tokens = jnp.asarray(tokens, jnp.int32)
+        assert tokens.ndim == 2 and tokens.shape[0] == 1
+        logits, st1 = self.prefill(tokens)
+        for i in range(len(self.specs)):
+            state.caches[i] = jax.tree.map(
+                lambda full, new: full.at[slot].set(new[0].astype(full.dtype)),
+                state.caches[i], st1.caches[i])
+        state.cache_len = state.cache_len.at[slot].set(st1.cache_len)
+        state.pos[slot] = st1.pos
+        state.active[slot] = True
+        return logits
+
+    def retire_slot(self, state: DecodeState, slot: int) -> None:
+        """Free a finished request's batch row. The cache row's stale
+        contents are inert: inactive rows are masked out of routing demand
+        and overwritten wholesale by the next `prefill_into`."""
+        assert state.batched
+        state.active[slot] = False
+
     def decode_step(self, tok, state: DecodeState
                     ) -> Tuple[jnp.ndarray, DecodeState]:
         """One KV-cached decode step: O(1) attention per layer, MoE through
@@ -929,11 +1018,32 @@ class SlotBufferEngine:
         the first wrong layer and replays it as a sync layer (the stall
         path). Outputs are therefore ALWAYS bit-exact versus
         `reference_decode_step` through the same jitted functions — the
-        horizon only moves how often the host blocks."""
+        horizon only moves how often the host blocks.
+
+        Batched serving states (`state.batched`, built by
+        `alloc_decode_state`/`prefill_into`) run the SAME control flow: each
+        row sits at its own cache position, the per-layer routing/pre-gate
+        masks are the union over active rows (idle slots masked on device),
+        and one (S+1, E) sync still covers the whole batch. Per-row outputs
+        stay bit-exact versus a single-request engine decoding the same
+        prompt, because every row's compute is independent of its
+        neighbours and residency is guaranteed (or replayed) before each
+        FFN dispatch."""
         assert self.fused, "incremental decode requires the fused runtime"
-        assert state.pos < self.max_seq, (
-            f"decode past max_seq={self.max_seq} would silently wrap the KV "
-            "ring buffer; raise max_seq at engine construction")
+        batched = state.batched
+        if batched:
+            act = np.asarray(state.active, bool)
+            if act.any():
+                assert int(np.asarray(state.pos)[act].max()) < self.max_seq, (
+                    f"decode past max_seq={self.max_seq} would silently wrap "
+                    "the KV ring buffer; raise max_seq at engine "
+                    "construction or retire the request")
+            active_dev = jnp.asarray(act)
+        else:
+            assert state.pos < self.max_seq, (
+                f"decode past max_seq={self.max_seq} would silently wrap the "
+                "KV ring buffer; raise max_seq at engine construction")
+            active_dev = None
         t0 = time.perf_counter()
         self.stats.steps += 1
         tok = jnp.asarray(tok, jnp.int32)
@@ -1028,8 +1138,12 @@ class SlotBufferEngine:
                 i += 1
                 continue
             x_in, old_c = x, caches[i]
-            x2, flat, r, needed_dev, c2 = self._pre_decode_fn(spec)(
-                p, x_in, old_c, clen)
+            if batched:
+                x2, flat, r, needed_dev, c2 = self._pre_decode_fn(
+                    spec, batched=True)(p, x_in, old_c, clen, active_dev)
+            else:
+                x2, flat, r, needed_dev, c2 = self._pre_decode_fn(spec)(
+                    p, x_in, old_c, clen)
             self.stats.jit_calls += 1
             self._clock += 1.0
             self.prefetcher.advance(self._clock)
@@ -1053,7 +1167,7 @@ class SlotBufferEngine:
                 continue
             # ---- sync layer: ONE blocking pull for verify + routing + S ---
             s = self._horizon(li)
-            masks = self._sync_masks_dev(li, s, flat, needed_dev)
+            masks = self._sync_masks_dev(li, s, flat, needed_dev, active_dev)
             sync, fail = pull_and_verify(masks)
             if fail >= 0:
                 i, li, x = replay_from(fail)
@@ -1075,6 +1189,14 @@ class SlotBufferEngine:
         self.stats.jit_calls += 1
         self.controller.update_layer_time(
             (time.perf_counter() - t0) / max(len(self.specs), 1))
+        if batched:
+            # only occupied slots advance; idle rows hold position so a
+            # later prefill_into overwrites a stable garbage row
+            return logits, DecodeState(
+                caches, clen + active_dev.astype(jnp.int32),
+                pos=np.where(act, np.asarray(state.pos) + 1,
+                             np.asarray(state.pos)),
+                active=act.copy())
         return logits, DecodeState(caches, clen + 1, pos=state.pos + 1)
 
     # -- fully-resident decode oracle ---------------------------------------
@@ -1103,7 +1225,14 @@ class SlotBufferEngine:
     def reference_decode_step(self, tok, state: DecodeState
                               ) -> Tuple[jnp.ndarray, DecodeState]:
         """One decode step of the fully-resident oracle. The slot path must
-        match this bitwise — under eviction churn, replay included."""
+        match this bitwise — under eviction churn, replay included.
+
+        Single-stream states only: the batched serving path's oracle is a
+        single-request engine decoding the same prompt (see
+        tests/test_serving_engine.py)."""
+        assert not state.batched, (
+            "reference_decode_step is the single-stream oracle; compare "
+            "batched rows against a single-request engine instead")
         assert state.pos < self.max_seq, (
             f"decode past max_seq={self.max_seq} would silently wrap the KV "
             "ring buffer; raise max_seq at engine construction")

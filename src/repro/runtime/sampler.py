@@ -1,14 +1,56 @@
-"""Token sampling."""
+"""Token sampling.
+
+`sample` covers the single-stream engines (one temperature for the whole
+batch). For continuous batching — where co-batched requests each carry their
+own temperature and PRNG stream — `temperature` may be a (B,) vector (rows
+with t <= 0 take the argmax) and `sample_rows` additionally gives every row
+its own key, so a request's sampled tokens are independent of whichever
+neighbours happen to share its decode iteration.
+"""
 from __future__ import annotations
+
+from typing import Union
 
 import jax
 import jax.numpy as jnp
 
 
 def sample(logits: jnp.ndarray, key: jax.Array,
-           temperature: float = 0.0) -> jnp.ndarray:
-    """logits: (B, V) -> (B,) int32."""
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, logits / temperature, axis=-1).astype(
-        jnp.int32)
+           temperature: Union[float, jnp.ndarray] = 0.0) -> jnp.ndarray:
+    """logits: (B, V) -> (B,) int32.
+
+    `temperature`: scalar (0 = greedy for the whole batch) or a (B,) vector
+    mixing greedy (t <= 0) and sampled rows in ONE batched step. Vector mode
+    draws all rows from the single `key` — per-request reproducibility needs
+    `sample_rows`.
+    """
+    t = jnp.asarray(temperature, jnp.float32)
+    if t.ndim == 0:
+        if float(t) <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / t, axis=-1).astype(
+            jnp.int32)
+    greedy = jnp.argmax(logits, axis=-1)
+    safe_t = jnp.where(t > 0.0, t, 1.0)
+    drawn = jax.random.categorical(key, logits / safe_t[:, None], axis=-1)
+    return jnp.where(t > 0.0, drawn, greedy).astype(jnp.int32)
+
+
+@jax.jit
+def sample_rows(logits: jnp.ndarray, keys: jax.Array,
+                temperature: jnp.ndarray) -> jnp.ndarray:
+    """Per-request batched sampling: one PRNG key and temperature per row.
+
+    logits: (B, V); keys: (B,) typed PRNG keys or (B, 2) uint32 key data;
+    temperature: (B,) float32. Rows with temperature <= 0 are greedy; a
+    sampled row draws from ITS key only, so its token stream is bit-identical
+    to a single-request engine stepping the same key schedule regardless of
+    batch composition.
+    """
+    greedy = jnp.argmax(logits, axis=-1)
+    t = jnp.asarray(temperature, jnp.float32)
+    safe_t = jnp.where(t > 0.0, t, 1.0)
+    drawn = jax.vmap(
+        lambda k, row: jax.random.categorical(k, row))(
+            keys, logits / safe_t[:, None])
+    return jnp.where(t > 0.0, drawn, greedy).astype(jnp.int32)

@@ -30,11 +30,12 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.core.coordinator import Policy, PredictionSource
-from repro.core.metrics import (RequestMetrics, RunReport, ServingReport,
-                                StepMetrics)
+from repro.core.metrics import (RunReport, ServingReport, StepMetrics,
+                                request_metrics)
 from repro.core.predictor import ForestPredictor
 from repro.core.step_size import token_diversity
-from repro.runtime.batching import ContinuousBatcher
+from repro.runtime.batching import ContinuousBatcher, WorkingSetAdmission
+from repro.runtime.request import Request
 from repro.simulator.events import SimCore, SimSpec, StepTrace, _distinct
 from repro.simulator.hardware import HardwareSpec
 
@@ -42,34 +43,26 @@ Key = Tuple[int, int]
 
 
 @dataclass
-class ServingRequest:
-    """A request plus its per-step routing trace and runtime state.
+class ServingRequest(Request):
+    """The canonical `Request` plus a replayed routing trace and simulator
+    runtime state.
 
     `steps[0]` supplies the prefill routing; `steps[t]` the t-th decode
     iteration's. Traces shorter than the decode length cycle (mod len).
-    Duck-types the fields `ContinuousBatcher` relies on (slot/output/done/
-    arrival_s).
+    Lifecycle fields (slot/output/arrival_s/admitted_s/first_token_s/
+    finish_s) come from `Request`, so `ContinuousBatcher` and
+    `core.metrics.request_metrics` see the exact surface the real-engine
+    path uses; there is no prompt token array (`prompt=None`) because the
+    simulator replays pre-collected routing, so `prompt_len` is set
+    directly.
     """
-    prompt_len: int
-    max_new_tokens: int
-    steps: List[StepTrace]
-    arrival_s: float = 0.0
-    request_id: int = 0
+    steps: List[StepTrace] = field(default_factory=list)
     topic: int = 0
     # runtime state (owned by simulate_serving)
-    slot: int = -1
-    output: List[int] = field(default_factory=list)
     step_idx: int = 0
-    admitted_s: float = -1.0
-    first_token_s: float = -1.0
-    finish_s: float = -1.0
     predicted: Dict[int, Set[Key]] = field(default_factory=dict)
     predicted_next: Dict[int, Set[Key]] = field(default_factory=dict)
     history: Optional[np.ndarray] = None
-
-    @property
-    def done(self) -> bool:
-        return len(self.output) >= self.max_new_tokens
 
     def step_trace(self, i: int) -> StepTrace:
         return self.steps[i % len(self.steps)]
@@ -77,6 +70,14 @@ class ServingRequest:
     @property
     def remaining_tokens(self) -> int:
         return self.max_new_tokens - len(self.output)
+
+    @property
+    def mean_distinct_experts(self) -> float:
+        """Mean distinct experts per MoE layer across the trace — the
+        request's expert working-set estimate for admission control."""
+        counts = [len(_distinct(a)) for st in self.steps
+                  for a in st.assignments]
+        return float(np.mean(counts)) if counts else 0.0
 
     def reset_runtime(self) -> None:
         self.slot = -1
@@ -105,20 +106,17 @@ class ServingConfig:
     max_batch: int = 4
     prefill_chunk: int = 16      # prompt tokens per layer-time of prefill
     max_iterations: int = 200000
+    # working-set admission cap over the shared cache (ROADMAP adaptive-S
+    # item): admit() consults the SimCore's step-size controller. The cap
+    # only ever defers admissions; `headroom` scales the budget.
+    admission_cap: bool = True
+    admission_headroom: float = 1.0
 
 
 def _token_table(assign: np.ndarray) -> np.ndarray:
     """Normalize a layer assignment to a (T, k) token->expert table."""
     a = np.asarray(assign)
     return a.reshape(-1, 1) if a.ndim == 1 else a
-
-
-def _request_metrics(r: ServingRequest) -> RequestMetrics:
-    return RequestMetrics(request_id=r.request_id, arrival_s=r.arrival_s,
-                          admitted_s=r.admitted_s,
-                          first_token_s=r.first_token_s,
-                          finish_s=r.finish_s, n_tokens=len(r.output),
-                          prompt_len=r.prompt_len)
 
 
 def _predict_target(core: SimCore, source: PredictionSource,
@@ -173,7 +171,17 @@ def simulate_serving(workload: ServingWorkload, spec: SimSpec,
     core = SimCore(spec, hw, policy)
     source = PredictionSource(policy, workload.routers, forest, M,
                               workload.top_k)
-    batcher = ContinuousBatcher(cfg.max_batch)
+    admission = None
+    if cfg.admission_cap:
+        # the SHARED controller: the same instance the per-layer access
+        # loop feeds with stall/overfetch signals steers admission
+        admission = WorkingSetAdmission(
+            controller=core.controller,
+            slots_per_layer=max(1, spec.capacity_experts // max(L, 1)),
+            expert_bytes=spec.expert_bytes,
+            default_ws=float(workload.top_k),
+            headroom=cfg.admission_headroom)
+    batcher = ContinuousBatcher(cfg.max_batch, admission=admission)
     report = ServingReport(
         run=RunReport(policy=policy.name, platform=hw.name,
                       model=workload.model),
@@ -185,6 +193,8 @@ def simulate_serving(workload: ServingWorkload, spec: SimSpec,
     for r in pending:
         r.reset_runtime()
         r.history = np.zeros((L, M), np.float64)
+        if admission is not None and r.predicted_ws is None:
+            r.predicted_ws = r.mean_distinct_experts
 
     now = 0.0
     it = 0
@@ -192,7 +202,7 @@ def simulate_serving(workload: ServingWorkload, spec: SimSpec,
 
     def finish(r: ServingRequest, t: float) -> None:
         r.finish_s = t
-        report.add_request(_request_metrics(r))
+        report.add_request(request_metrics(r))
 
     while pending or batcher.has_work:
         if it >= cfg.max_iterations:
