@@ -89,9 +89,14 @@ def bench_sequential(cfg, eng, p):
 
 
 def bench_serving(cfg, eng, p, max_batch):
-    """Continuous batching through ServingEngine at `max_batch` slots."""
+    """Continuous batching through ServingEngine at `max_batch` slots.
+
+    Pinned to the monolithic prefill path (`prefill_chunk=0`): this bench's
+    committed baseline measures batched-vs-sequential DECODE and predates
+    chunked prefill; the chunked-vs-monolithic comparison lives in
+    bench_prefill.py."""
     sb = _slot_engine(cfg, eng, p)
-    scfg = EngineServingConfig(max_batch=max_batch)
+    scfg = EngineServingConfig(max_batch=max_batch, prefill_chunk=0)
     ServingEngine(sb, scfg).serve(_requests(p, seed=1))     # warmup/jit
     best = None
     for rep in range(p["repeats"]):
@@ -111,7 +116,8 @@ def verify_parity(cfg, eng, p):
     (the logit-level contract lives in tests/test_serving_engine.py)."""
     sb = _slot_engine(cfg, eng, p)
     reqs = _requests(dict(p, requests=3, max_new=6), seed=9)
-    ServingEngine(sb, EngineServingConfig(max_batch=3)).serve(reqs)
+    ServingEngine(sb, EngineServingConfig(max_batch=3,
+                                          prefill_chunk=0)).serve(reqs)
     ref = _slot_engine(cfg, eng, p)
     return all(
         np.array_equal(ref.generate(r.prompt[None, :], r.max_new_tokens)[0],

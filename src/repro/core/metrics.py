@@ -112,14 +112,38 @@ class RequestMetrics:
     finish_s: float         # last token emitted
     n_tokens: int           # output tokens (>= 1)
     prompt_len: int = 0
+    # chunked prefill: when the prompt finished ingesting (may span several
+    # serving iterations, interleaved with decode); < 0 = not recorded
+    # (monolithic / simulator paths), in which case prefill is taken to run
+    # right up to the first token
+    prefill_done_s: float = -1.0
 
     @property
     def queue_delay_s(self) -> float:
         return self.admitted_s - self.arrival_s
 
     @property
+    def prefill_s(self) -> float:
+        """Prompt-ingestion span: admission -> prompt fully in cache. Under
+        chunked serving this includes the decode iterations interleaved
+        between chunks — the fairness cost a long prompt pays so co-batched
+        decoders don't stall."""
+        end = (self.prefill_done_s if self.prefill_done_s >= 0
+               else self.first_token_s)
+        return end - self.admitted_s
+
+    @property
+    def first_step_s(self) -> float:
+        """Prefill-complete -> first token emitted (sampling + bookkeeping);
+        0 when prefill completion wasn't separately recorded."""
+        if self.prefill_done_s < 0:
+            return 0.0
+        return self.first_token_s - self.prefill_done_s
+
+    @property
     def ttft_s(self) -> float:
-        """Time to first token, measured from arrival (includes queueing)."""
+        """Time to first token, measured from arrival (includes queueing).
+        Identity: ttft_s == queue_delay_s + prefill_s + first_step_s."""
         return self.first_token_s - self.arrival_s
 
     @property
@@ -143,7 +167,8 @@ def request_metrics(r) -> RequestMetrics:
                           admitted_s=r.admitted_s,
                           first_token_s=r.first_token_s,
                           finish_s=r.finish_s, n_tokens=len(r.output),
-                          prompt_len=r.prompt_len)
+                          prompt_len=r.prompt_len,
+                          prefill_done_s=getattr(r, "prefill_done_s", -1.0))
 
 
 @dataclass
@@ -184,6 +209,20 @@ class ServingReport:
         return self._dist("queue_delay_s")
 
     @property
+    def ttft_split(self) -> Dict[str, float]:
+        """Mean TTFT attribution: time in queue vs prompt ingestion vs the
+        first sampling step. The three components sum to mean TTFT, so a
+        regression shows WHERE first-token latency went (admission backlog,
+        prefill serialization, or sampling overhead)."""
+        out = {}
+        for name, attr in (("queue", "queue_delay_s"),
+                           ("prefill", "prefill_s"),
+                           ("first_step", "first_step_s")):
+            xs = [getattr(r, attr) for r in self.requests]
+            out[name] = float(np.mean(xs)) if xs else 0.0
+        return out
+
+    @property
     def throughput_tok_s(self) -> float:
         n = sum(r.n_tokens for r in self.requests)
         return n / self.makespan_s if self.makespan_s > 0 else 0.0
@@ -208,4 +247,6 @@ class ServingReport:
                            ("queue_delay", self.queue_delay)):
             for k, v in dist.items():
                 out[f"{name}_{k}_s"] = v
+        for k, v in self.ttft_split.items():
+            out[f"ttft_{k}_mean_s"] = v
         return out

@@ -67,11 +67,13 @@ def _serve_engine(args, cfg, specs, rng) -> None:
     slots = max(2, int(cfg.moe.num_experts * args.capacity_frac))
     sb = SlotBufferEngine(cfg, eng.params, eng.model,
                           n_slots_per_layer=slots, max_seq=max_seq)
-    srv = ServingEngine(sb, EngineServingConfig(max_batch=args.batch))
+    srv = ServingEngine(sb, EngineServingConfig(
+        max_batch=args.batch, prefill_chunk=args.prefill_chunk))
     rep = srv.serve(requests)
     s = rep.summary()
     print(f"engine backend: slots/layer={slots} batch={args.batch} "
-          f"S={sb.controller.s}")
+          f"S={sb.controller.s} "
+          f"prefill_chunk={args.prefill_chunk if srv._chunked else 'mono'}")
     print(f"  {'engine':14s} tput={s['throughput_tok_s']:8.1f}tok/s "
           f"ttft_p50={s['ttft_p50_s']*1e3:8.3f}ms "
           f"ttft_p99={s['ttft_p99_s']*1e3:8.3f}ms "
@@ -79,6 +81,9 @@ def _serve_engine(args, cfg, specs, rng) -> None:
           f"tpot_p99={s['tpot_p99_s']*1e3:7.3f}ms "
           f"occ={s['mean_occupancy']:.2f} "
           f"deferred={srv.batcher.stats.admission_deferred}")
+    print(f"  ttft split: queue={s['ttft_queue_mean_s']*1e3:.3f}ms "
+          f"prefill={s['ttft_prefill_mean_s']*1e3:.3f}ms "
+          f"first_step={s['ttft_first_step_mean_s']*1e3:.3f}ms")
 
 
 def main() -> None:
@@ -97,6 +102,9 @@ def main() -> None:
                     choices=list(WORKLOAD_PATTERNS))
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="engine backend: per-request sampling temperature")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="engine backend: fixed prompt-chunk width "
+                         "interleaved with decode (0 = monolithic prefill)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.requests < 1:

@@ -34,14 +34,16 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     window: int = 0,
                     logit_softcap: float = 0.0,
                     scale: Optional[float] = None,
-                    q_offset: int = 0,
+                    q_offset=0,
                     q_chunk: int = 512,
                     kv_chunk: int = 1024) -> jnp.ndarray:
     """Online-softmax attention.
 
     q: (B, Tq, Hq, D); k, v: (B, S, Hkv, D); returns (B, Tq, Hq, D).
     Hq must be a multiple of Hkv (GQA). `window > 0` = sliding window.
-    `q_offset`: absolute position of q[0] (prefill continuation / decode).
+    `q_offset`: absolute position of q[0] (prefill continuation / decode);
+    may be a traced int32 scalar (chunked prefill passes the cursor offset
+    as an operand so the chunk jit never re-specializes on position).
     """
     B, Tq, Hq, D = q.shape
     S, Hkv = k.shape[1], k.shape[2]
@@ -253,6 +255,51 @@ def gqa_decode(params, x: jnp.ndarray, k_cache, v_cache, cache_len, *,
     return out, k_cache, v_cache
 
 
+def gqa_prefill_chunk(params, h: jnp.ndarray, positions: jnp.ndarray,
+                      k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                      cache_len, n_valid, *,
+                      rope_theta: float, logit_softcap: float = 0.0,
+                      scale: Optional[float] = None, norm_eps: float = 1e-6,
+                      kv_bucket: Optional[int] = None):
+    """One fixed-shape prompt chunk of GQA attention, resuming at `cache_len`.
+
+    h: (B, C, d) normed hidden states of a padded chunk whose first `n_valid`
+    rows are real tokens; positions: (B, C) absolute positions
+    (cache_len .. cache_len + C - 1, shared across rows); caches:
+    (B, S, Hkv, D) addressed by absolute position (S = max_seq, no ring
+    reuse). The chunk's K/V rows are scattered at their absolute positions —
+    padding rows write out of range and DROP, so later chunks and decode can
+    never read garbage — then the chunk's queries attend causally over
+    everything ingested so far through the SAME `flash_attention` kernel the
+    monolithic prefill uses (`q_offset` supplies the chunk's start offset).
+    Identical kernel + fp32 accumulation over a zero-padded tail is what
+    keeps chunked logits bit-exact versus the monolithic path.
+
+    `kv_bucket` (static): attend over only the leading `kv_bucket` cache
+    rows instead of all S — the caller picks a power-of-two prefix covering
+    `cache_len + C`, so attention cost tracks the INGESTED prefix, not
+    max_seq, at a log-bounded number of extra jit specializations.
+
+    Returns (mix (B, C, d), k_cache, v_cache).
+    """
+    B, C, _ = h.shape
+    S = k_cache.shape[1]
+    q = jnp.einsum("btd,dhk->bthk", h, params["wq"])
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"], norm_eps)
+    if rope_theta > 0:
+        q = rope(q, positions, rope_theta)
+    k, v = gqa_project_kv(params, h, positions, rope_theta, norm_eps)
+    idx = jnp.where(jnp.arange(C) < n_valid, positions[0], S)   # pad -> drop
+    k_cache = k_cache.at[:, idx].set(k, mode="drop")
+    v_cache = v_cache.at[:, idx].set(v, mode="drop")
+    kb = S if kv_bucket is None else min(kv_bucket, S)
+    out = flash_attention(q, k_cache[:, :kb], v_cache[:, :kb], causal=True,
+                          logit_softcap=logit_softcap, scale=scale,
+                          q_offset=cache_len)
+    return jnp.einsum("bthk,hkd->btd", out, params["wo"]), k_cache, v_cache
+
+
 # ---------------------------------------------------------------------------
 # Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3)
 # ---------------------------------------------------------------------------
@@ -281,10 +328,12 @@ def init_mla_params(key, d_model: int, num_heads: int, mla, dtype=jnp.bfloat16):
     return p
 
 
-def _mla_qkv(params, x, positions, mla, rope_theta, norm_eps,
-             latent=None, latent_pos=None):
-    """Compute q, k, v from hidden states (and optionally a cached latent)."""
-    nope, rope_d = mla.qk_nope_head_dim, mla.qk_rope_head_dim
+def _mla_q(params, x, positions, mla, rope_theta, norm_eps):
+    """The MLA query path (LoRA or dense projection, nope/pe split, rope on
+    the pe half) — shared by the monolithic and chunked prefill paths so a
+    query-side change can never diverge them (decode keeps the halves
+    separate for the weight-absorbed trick)."""
+    nope = mla.qk_nope_head_dim
     if "wq_a" in params:
         qa = rms_norm(jnp.einsum("btd,dr->btr", x, params["wq_a"]),
                       params["q_a_norm"], norm_eps)
@@ -293,7 +342,14 @@ def _mla_qkv(params, x, positions, mla, rope_theta, norm_eps,
         q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
     q_nope, q_pe = q[..., :nope], q[..., nope:]
     q_pe = rope(q_pe, positions, rope_theta)
-    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    return jnp.concatenate([q_nope, q_pe], axis=-1)
+
+
+def _mla_qkv(params, x, positions, mla, rope_theta, norm_eps,
+             latent=None, latent_pos=None):
+    """Compute q, k, v from hidden states (and optionally a cached latent)."""
+    nope, rope_d = mla.qk_nope_head_dim, mla.qk_rope_head_dim
+    q = _mla_q(params, x, positions, mla, rope_theta, norm_eps)
 
     if latent is None:
         kv_a = jnp.einsum("btd,dr->btr", x, params["wkv_a"])
@@ -320,6 +376,58 @@ def mla_attention(params, x: jnp.ndarray, *, positions, mla, rope_theta: float,
     scale = (mla.qk_nope_head_dim + mla.qk_rope_head_dim) ** -0.5
     out = flash_attention(q, k, v, causal=causal, window=window, scale=scale)
     return jnp.einsum("bthk,hkd->btd", out, params["wo"])
+
+
+def mla_prefill_chunk(params, h: jnp.ndarray, positions: jnp.ndarray,
+                      latent_cache, pe_cache, cache_len, n_valid, *,
+                      mla, rope_theta: float, norm_eps: float = 1e-6,
+                      kv_bucket: Optional[int] = None):
+    """One fixed-shape prompt chunk of MLA attention, resuming at `cache_len`.
+
+    h: (B, C, d) normed hidden states of a padded chunk (first `n_valid` rows
+    real); latent_cache: (B, S, kv_lora_rank); pe_cache: (B, S, 1, rope_dim).
+    The chunk's compressed latent + shared rope key rows land at their
+    absolute positions (padding rows drop), then K/V for the ingested
+    positions are re-expanded from the latent cache — the prefill-side
+    expansion, not decode's weight-absorbed trick — and the chunk's queries
+    attend with `flash_attention(q_offset=cache_len)`. The cache stores the
+    same post-norm bf16 latent the monolithic path attends with, so the two
+    paths stay bit-exact.
+
+    `kv_bucket` (static): expand/attend over only the leading `kv_bucket`
+    cache rows — a power-of-two prefix covering `cache_len + C` — so the
+    per-chunk expansion einsum is O(ingested prefix), not O(max_seq), at a
+    log-bounded number of extra jit specializations.
+
+    Returns (mix (B, C, d), latent_cache, pe_cache).
+    """
+    B, C, _ = h.shape
+    nope, rope_d = mla.qk_nope_head_dim, mla.qk_rope_head_dim
+    R = mla.kv_lora_rank
+    S = latent_cache.shape[1]
+    q = _mla_q(params, h, positions, mla, rope_theta, norm_eps)
+
+    kv_a = jnp.einsum("btd,dr->btr", h, params["wkv_a"])
+    c_kv = rms_norm(kv_a[..., :R], params["kv_a_norm"], norm_eps)
+    k_pe = rope(kv_a[..., R:][..., None, :], positions, rope_theta)
+    idx = jnp.where(jnp.arange(C) < n_valid, positions[0], S)   # pad -> drop
+    latent_cache = latent_cache.at[:, idx].set(
+        c_kv.astype(latent_cache.dtype), mode="drop")
+    pe_cache = pe_cache.at[:, idx].set(k_pe.astype(pe_cache.dtype),
+                                       mode="drop")
+
+    kb = S if kv_bucket is None else min(kv_bucket, S)
+    kv = jnp.einsum("bsr,rhk->bshk", latent_cache[:, :kb], params["wkv_b"])
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    H = k_nope.shape[2]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(pe_cache[:, :kb], (B, kb, H, rope_d))],
+        axis=-1)
+    scale = (nope + rope_d) ** -0.5
+    out = flash_attention(q, k, v, causal=True, scale=scale,
+                          q_offset=cache_len)
+    mix = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return mix, latent_cache, pe_cache
 
 
 def mla_decode(params, x: jnp.ndarray, latent_cache, pe_cache, cache_len, *,

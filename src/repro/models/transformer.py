@@ -335,6 +335,59 @@ def layer_prefill(p, cfg: ModelConfig, spec: LayerSpec, x: jnp.ndarray,
     return _ffn_part(p, cfg, spec, x, router_sink), cache
 
 
+def layer_prefill_chunk(p, cfg: ModelConfig, spec: LayerSpec, x: jnp.ndarray,
+                        positions: jnp.ndarray, cache, cache_len, n_valid,
+                        *, kv_bucket: Optional[int] = None,
+                        router_sink: Optional[list] = None):
+    """One fixed-shape prompt chunk through a layer, resuming at `cache_len`.
+
+    x: (B, C, d) padded chunk (first `n_valid` rows real tokens, the rest
+    padding whose K/V writes drop and whose outputs are garbage the caller
+    ignores); positions: (B, C) absolute positions; cache: this layer's
+    cache entry (from `init_layer_cache`, already holding the previous
+    chunks); cache_len: tokens already ingested. Returns (x, new_cache).
+
+    Because the chunk shape (B, C) is fixed, a jit of this function compiles
+    once per (layer spec, `kv_bucket`) — prompt-length diversity costs zero
+    recompiles; `kv_bucket` (a static power-of-two prefix covering
+    cache_len + C) bounds the attended/expanded cache slice so per-chunk
+    cost tracks the ingested prefix, at log2(max_seq) specializations.
+    Only position-addressable attention layers support chunked ingestion:
+    recurrent/xLSTM mixers carry sequential state through the whole prompt,
+    and sliding windows smaller than max_seq ring-wrap the cache (absolute
+    positions would collide), so both raise.
+    """
+    if spec.kind != "attn":
+        raise NotImplementedError(
+            f"chunked prefill supports attention layers only, got {spec.kind}")
+    if spec.window:
+        raise NotImplementedError(
+            "chunked prefill requires global attention (ring-wrapped sliding-"
+            "window caches lose the absolute positions chunks address)")
+    p = gather_for_compute(p)
+    h = rms_norm(x, p["pre_norm"], cfg.norm_eps, zero_centered=_zc(cfg))
+    new_cache = dict(cache)
+    if cfg.attention == "mla":
+        mix, lat, pe = attn_mod.mla_prefill_chunk(
+            p["attn"], h, positions, cache["latent"], cache["pe"], cache_len,
+            n_valid, mla=cfg.mla, rope_theta=cfg.rope_theta,
+            norm_eps=cfg.norm_eps, kv_bucket=kv_bucket)
+        new_cache.update(latent=lat, pe=pe)
+    else:
+        mix, kc, vc = attn_mod.gqa_prefill_chunk(
+            p["attn"], h, positions, cache["k"], cache["v"], cache_len,
+            n_valid, rope_theta=cfg.rope_theta,
+            logit_softcap=cfg.attn_logit_softcap, norm_eps=cfg.norm_eps,
+            kv_bucket=kv_bucket)
+        new_cache.update(k=kc, v=vc)
+    if "post_attn_norm" in p:
+        mix = rms_norm(mix, p["post_attn_norm"], cfg.norm_eps,
+                       zero_centered=_zc(cfg))
+    x = x + mix
+    x = constrain(x, ("data", None, None))
+    return _ffn_part(p, cfg, spec, x, router_sink), new_cache
+
+
 def layer_decode(p, cfg: ModelConfig, spec: LayerSpec, x: jnp.ndarray,
                  cache, cache_len, *, src_len=None):
     """One-token layer step. x: (B, 1, d). Returns (x, new_cache).

@@ -44,8 +44,9 @@ from repro.core.step_size import StepSizeController
 from repro.core.trace import Sample, TraceLog
 from repro.models import moe as moe_mod
 from repro.models.layers import rms_norm, swiglu
-from repro.models.transformer import (LayerSpec, Model, layer_decode,
-                                      layer_forward, layer_prefill,
+from repro.models.transformer import (LayerSpec, Model, init_layer_cache,
+                                      layer_decode, layer_forward,
+                                      layer_prefill, layer_prefill_chunk,
                                       split_ffn_params)
 from repro.runtime.instrument import Stopwatch
 from repro.runtime.sampler import sample
@@ -286,6 +287,43 @@ class SlotPathStats:
     def reset(self) -> None:
         for f in dataclasses.fields(self):
             setattr(self, f.name, 0)
+
+
+# chunked prefill: fixed prompt-chunk width C. Every chunk dispatch is a
+# padded (1, C) shape, so the jit cache is keyed on (C, layer spec) only —
+# compile count stays flat no matter how many distinct prompt lengths a
+# serving mix carries.
+DEFAULT_PREFILL_CHUNK = 32
+
+
+@dataclass
+class PrefillCursor:
+    """Resumable chunked-prefill state for ONE prompt.
+
+    Built by `SlotBufferEngine.start_prefill`; each `prefill_chunk` call
+    ingests the next `chunk`-wide padded slice of `tokens` into the
+    per-layer single-row `caches` (KV written at absolute positions
+    `offset..offset+t`). The serving scheduler advances cursors one chunk
+    per iteration, interleaved with batched decode, so a long prompt never
+    head-of-line blocks co-batched decoders. When the cursor completes,
+    `logits` holds the prompt's last-token logits (1, V) for sampling the
+    first output token.
+    """
+    tokens: np.ndarray           # (T,) int32 full prompt
+    chunk: int                   # fixed chunk width C
+    caches: List[Any]            # per-layer batch-1 caches, filled so far
+    offset: int = 0              # tokens already ingested
+    logits: Optional[jnp.ndarray] = None   # set when done
+    skipped: int = 0             # scheduler aging: consecutive iterations
+                                 # another cursor was advanced instead
+
+    @property
+    def done(self) -> bool:
+        return self.offset >= len(self.tokens)
+
+    @property
+    def remaining(self) -> int:
+        return len(self.tokens) - self.offset
 
 
 @dataclass
@@ -537,6 +575,73 @@ class SlotBufferEngine:
                 return x, flat, r, needed, cache
             self._fns[key] = jax.jit(fn)
         return self._fns[key]
+
+    def _embed_chunk_fn(self):
+        """Embed one padded (1, C) prompt chunk starting at `offset`.
+        Returns (x, positions (1, C) absolute, valid (C,) bool row mask)."""
+        if "embed_chunk" not in self._fns:
+            model = self.model
+
+            def fn(params, tokens, offset, n_valid):
+                B, C = tokens.shape
+                positions = jnp.broadcast_to(
+                    offset + jnp.arange(C)[None, :], (B, C))
+                x = model.embed(params, tokens, positions=positions)
+                return x, positions, jnp.arange(C) < n_valid
+            self._fns["embed_chunk"] = jax.jit(fn)
+        return self._fns["embed_chunk"]
+
+    @staticmethod
+    def _kv_bucket(end: int, max_seq: int) -> int:
+        """Static KV-prefix length covering `end` ingested positions: the
+        next power of two (floor 8), clamped to max_seq. Chunk attention
+        (and MLA latent expansion) runs over this prefix instead of the
+        whole max_seq cache, so per-chunk cost tracks what's actually been
+        ingested — at a log2(max_seq)-bounded number of specializations,
+        still independent of prompt-length diversity."""
+        b = 8
+        while b < end:
+            b <<= 1
+        return min(b, max_seq)
+
+    def _dense_prefill_chunk_fn(self, spec: LayerSpec, bucket: int):
+        key = ("dense_prefill_chunk", self._spec_key(spec), bucket)
+        if key not in self._fns:
+            cfg, cspec = self.cfg, self._spec_key(spec)
+            self._fns[key] = jax.jit(
+                lambda p, x, pos, c, clen, nv: layer_prefill_chunk(
+                    p, cfg, cspec, x, pos, c, clen, nv, kv_bucket=bucket))
+        return self._fns[key]
+
+    def _pre_prefill_chunk_fn(self, spec: LayerSpec, bucket: int):
+        """Chunk-prefill pre half of a MoE layer: chunk attention resuming at
+        cache_len + KV scatter + norm + on-device routing. Padding rows are
+        masked out of the needed-mask union (`active`), so a padded chunk
+        can never demand — or evict residency for — experts no real token
+        routed to."""
+        key = ("pre_prefill_chunk", self._spec_key(spec), bucket)
+        if key not in self._fns:
+            cfg, cspec = self.cfg, self._spec_key(spec)
+
+            def fn(p, x, positions, cache, cache_len, n_valid):
+                stripped, spec_nf = split_ffn_params(p, cspec)
+                x, new_cache = layer_prefill_chunk(
+                    stripped, cfg, spec_nf, x, positions, cache, cache_len,
+                    n_valid, kv_bucket=bucket)
+                active = jnp.arange(x.shape[1]) < n_valid
+                flat, r, needed = _route_ffn_entry(p, cfg, x, active)
+                return x, flat, r, needed, new_cache
+            self._fns[key] = jax.jit(fn)
+        return self._fns[key]
+
+    def _logits_at_fn(self):
+        """Last-token logits at a DYNAMIC row index (the final chunk's last
+        valid row lands mid-buffer, not at -1)."""
+        if "logits_at" not in self._fns:
+            model = self.model
+            self._fns["logits_at"] = jax.jit(
+                lambda params, x, idx: model.logits(params, x[:, idx]))
+        return self._fns["logits_at"]
 
     def _pre_decode_fn(self, spec: LayerSpec, batched: bool = False):
         """Decode pre half: O(1) attention against the KV cache + cache
@@ -909,6 +1014,25 @@ class SlotBufferEngine:
             self.prefetch_window(
                 [(lj, sorted(es)) for lj, es in sorted(predicted.items())])
 
+    def _prefill_moe_sync(self, li: int, flat, needed_dev,
+                          active_dev=None) -> jnp.ndarray:
+        """The prefill paths' shared per-MoE-layer sync sequence: pull the
+        (S+1, E) mask block, advance the link clock, settle/tier/ensure
+        residency and fan out the speculative window. Monolithic `prefill`
+        and `prefill_chunk` MUST run this identically — any accounting or
+        residency change that touched only one would silently diverge the
+        two ingestion paths the bit-exactness contract pins together.
+        Returns the layer's slot map for the FFN dispatch."""
+        s = self._horizon(li)
+        masks = self._sync_masks_dev(li, s, flat, needed_dev, active_dev)
+        masks_h = np.asarray(masks)          # ONE (S+1, E) blocking pull
+        self.stats.host_syncs += 1
+        self._clock += 1.0
+        self.prefetcher.advance(self._clock)
+        needed, predicted = self._decode_sync_rows(li, s, masks_h)
+        self._sync_moe_layer(li, needed, predicted)
+        return jnp.asarray(self.table.layer_slot_map(li))
+
     def prefill(self, tokens) -> Tuple[jnp.ndarray, DecodeState]:
         """Run the prompt through the slot path, populating per-layer KV /
         recurrent caches. Returns (last-token logits (B, V), DecodeState).
@@ -937,15 +1061,7 @@ class SlotBufferEngine:
                 p, x, positions)
             caches.append(c)
             self.stats.jit_calls += 1
-            s = self._horizon(li)
-            masks = self._sync_masks_dev(li, s, flat, needed_dev)
-            masks_h = np.asarray(masks)      # ONE (S+1, E) blocking pull
-            self.stats.host_syncs += 1
-            self._clock += 1.0
-            self.prefetcher.advance(self._clock)
-            needed, predicted = self._decode_sync_rows(li, s, masks_h)
-            self._sync_moe_layer(li, needed, predicted)
-            slot_map = jnp.asarray(self.table.layer_slot_map(li))
+            slot_map = self._prefill_moe_sync(li, flat, needed_dev)
             x = self._ffn_fn(spec)(p, self.buffer, slot_map, x, flat, r)
             self.stats.jit_calls += 1
             li += 1
@@ -956,13 +1072,139 @@ class SlotBufferEngine:
         return logits, DecodeState(caches, jnp.asarray(T, jnp.int32),
                            pos=int(T))
 
+    # -- chunked prefill (fixed-shape prompt ingestion) ----------------------
+    @property
+    def chunked_prefill_supported(self) -> bool:
+        """Chunked ingestion addresses caches by absolute position: it needs
+        every layer to be a global-attention layer (recurrent/xLSTM mixers
+        carry sequential state; sliding windows ring-wrap the cache)."""
+        return all(s.kind == "attn" and s.window == 0 for s in self.specs)
+
+    def start_prefill(self, tokens,
+                      chunk_size: int = DEFAULT_PREFILL_CHUNK
+                      ) -> PrefillCursor:
+        """Open a resumable chunked prefill for one prompt. tokens: (T,) or
+        (1, T) int32. Drive it with `prefill_chunk` (one fixed-shape chunk
+        per call); consume the result via `finish_prefill_into` (batched
+        serving) or let `prefill_chunked` run it to completion."""
+        assert self.fused, "chunked prefill requires the fused runtime"
+        assert self.chunked_prefill_supported, (
+            "chunked prefill needs global-attention layers throughout; use "
+            "the monolithic `prefill` for this architecture")
+        toks = np.asarray(tokens, np.int32)
+        assert toks.ndim == 1 or toks.shape[0] == 1, (
+            "start_prefill ingests ONE prompt ((T,) or (1, T)); flattening "
+            f"a {toks.shape} batch would silently concatenate prompts")
+        toks = toks.reshape(-1)
+        T = toks.size
+        assert 1 <= T <= self.max_seq, (
+            f"prompt {T} exceeds max_seq {self.max_seq}")
+        assert chunk_size >= 1
+        caches = [init_layer_cache(self.cfg, spec, 1, self.max_seq,
+                                   self.model.dtype)
+                  for spec in self.specs]
+        return PrefillCursor(tokens=toks,
+                             chunk=int(min(chunk_size, self.max_seq)),
+                             caches=caches)
+
+    def prefill_chunk(self, cursor: PrefillCursor) -> bool:
+        """Ingest ONE padded (1, C) chunk of the cursor's prompt through the
+        slot path, writing KV at absolute positions offset..offset+t and
+        attending over everything ingested so far. Returns `cursor.done`.
+
+        Every dispatch here is shaped (1, C) regardless of prompt length or
+        position, so the jit cache is keyed on (chunk width, layer spec,
+        KV-prefix bucket) only — the bucket set is log2(max_seq)-bounded,
+        so serving a mix of prompt lengths compiles nothing new once its
+        longest prefix has been seen. Each chunk runs the same
+        adaptive-horizon residency
+        machinery as `prefill` (one (S+1, E) sync per MoE layer, batched
+        speculative swap-ins), with padding rows masked out of routing
+        demand, so chunked logits stay bit-exact versus the monolithic
+        path even under eviction churn."""
+        assert not cursor.done, "cursor already consumed its prompt"
+        o, C = cursor.offset, cursor.chunk
+        t = min(C, len(cursor.tokens) - o)
+        bucket = self._kv_bucket(o + C, self.max_seq)
+        buf = np.zeros((1, C), np.int32)
+        buf[0, :t] = cursor.tokens[o:o + t]
+        self.stats.steps += 1
+        x, positions, valid = self._embed_chunk_fn()(
+            self.params, jnp.asarray(buf), o, t)
+        self.stats.jit_calls += 1
+        li = 0
+        for i, spec in enumerate(self.specs):
+            p = self._p[i]
+            if not spec.is_moe:
+                x, cursor.caches[i] = self._dense_prefill_chunk_fn(
+                    spec, bucket)(p, x, positions, cursor.caches[i], o, t)
+                self.stats.jit_calls += 1
+                continue
+            x, flat, r, needed_dev, cursor.caches[i] = \
+                self._pre_prefill_chunk_fn(spec, bucket)(
+                    p, x, positions, cursor.caches[i], o, t)
+            self.stats.jit_calls += 1
+            slot_map = self._prefill_moe_sync(li, flat, needed_dev, valid)
+            x = self._ffn_fn(spec)(p, self.buffer, slot_map, x, flat, r)
+            self.stats.jit_calls += 1
+            li += 1
+        self.cache.protect_early_layers(
+            max(1, min(self._s_eff(), len(self.moe_layer_ids))))
+        cursor.offset = o + t
+        if cursor.done:
+            cursor.logits = self._logits_at_fn()(self.params, x, t - 1)
+            self.stats.jit_calls += 1
+        return cursor.done
+
+    def _run_prefill_cursor(self, tokens, chunk_size: int) -> PrefillCursor:
+        """Open a cursor and drive it to completion (the non-interleaved
+        convenience drive shared by `prefill_chunked`/`prefill_into`)."""
+        cursor = self.start_prefill(tokens, chunk_size)
+        while not self.prefill_chunk(cursor):
+            pass
+        return cursor
+
+    def prefill_chunked(self, tokens,
+                        chunk_size: int = DEFAULT_PREFILL_CHUNK
+                        ) -> Tuple[jnp.ndarray, DecodeState]:
+        """Chunked counterpart of `prefill`: same (logits, DecodeState)
+        contract, built one fixed-shape chunk at a time."""
+        cursor = self._run_prefill_cursor(tokens, chunk_size)
+        T = len(cursor.tokens)
+        return cursor.logits, DecodeState(
+            cursor.caches, jnp.asarray(T, jnp.int32), pos=int(T))
+
+    def _commit_prefill_row(self, state: DecodeState, slot: int,
+                            caches, T: int) -> None:
+        """Write one completed prompt's per-layer batch-1 caches into batch
+        row `slot` and mark it live — the ONE row-commit sequence behind
+        both the monolithic and chunked admission paths (a bookkeeping
+        change applied to only one would diverge them)."""
+        for i in range(len(self.specs)):
+            state.caches[i] = jax.tree.map(
+                lambda full, new: full.at[slot].set(new[0].astype(full.dtype)),
+                state.caches[i], caches[i])
+        state.cache_len = state.cache_len.at[slot].set(T)
+        state.pos[slot] = T
+        state.active[slot] = True
+
+    def finish_prefill_into(self, state: DecodeState, slot: int,
+                            cursor: PrefillCursor) -> jnp.ndarray:
+        """Commit a completed cursor into batch row `slot` of a batched
+        DecodeState (the chunked analogue of `prefill_into`'s tail).
+        Returns the prompt's last-token logits (1, V)."""
+        assert state.batched and cursor.done
+        assert not state.active[slot], f"slot {slot} is still occupied"
+        self._commit_prefill_row(state, slot, cursor.caches,
+                                 int(len(cursor.tokens)))
+        return cursor.logits
+
     # -- batched serving state (continuous batching over one engine) --------
     def alloc_decode_state(self, batch: int) -> DecodeState:
         """Empty batched DecodeState with `batch` request slots: zeroed
         per-layer caches, per-row cache positions, all slots idle. Requests
         enter via `prefill_into` and leave via `retire_slot`; the decode
         batch shape stays static so the jitted step never retraces."""
-        from repro.models.transformer import init_layer_cache
         caches = [init_layer_cache(self.cfg, spec, batch, self.max_seq,
                                    self.model.dtype)
                   for spec in self.specs]
@@ -970,8 +1212,8 @@ class SlotBufferEngine:
                            pos=np.zeros(batch, np.int64),
                            active=np.zeros(batch, bool))
 
-    def prefill_into(self, state: DecodeState, slot: int, tokens
-                     ) -> jnp.ndarray:
+    def prefill_into(self, state: DecodeState, slot: int, tokens,
+                     chunk_size: Optional[int] = None) -> jnp.ndarray:
         """Admit a request: run its prompt through the slot path (seeding
         shared-cache residency) and write the resulting KV/recurrent caches
         into batch row `slot` of `state` IN PLACE. Returns the prompt's
@@ -979,19 +1221,22 @@ class SlotBufferEngine:
 
         tokens: (1, T) int32. The prefill itself is single-row (prompts of
         different lengths can't share one dispatch); only decode iterations
-        are batched — the paper's continuous-batching regime."""
+        are batched — the paper's continuous-batching regime.
+
+        `chunk_size`: ingest through the fixed-shape chunked path (bounded
+        recompiles; bit-exact vs monolithic) instead of one whole-prompt
+        dispatch. Schedulers that want to interleave chunks with decode
+        drive `start_prefill`/`prefill_chunk`/`finish_prefill_into`
+        directly; this convenience form runs the cursor to completion."""
         assert state.batched, "prefill_into requires an alloc_decode_state"
         assert not state.active[slot], f"slot {slot} is still occupied"
         tokens = jnp.asarray(tokens, jnp.int32)
         assert tokens.ndim == 2 and tokens.shape[0] == 1
+        if chunk_size:
+            cursor = self._run_prefill_cursor(tokens, chunk_size)
+            return self.finish_prefill_into(state, slot, cursor)
         logits, st1 = self.prefill(tokens)
-        for i in range(len(self.specs)):
-            state.caches[i] = jax.tree.map(
-                lambda full, new: full.at[slot].set(new[0].astype(full.dtype)),
-                state.caches[i], st1.caches[i])
-        state.cache_len = state.cache_len.at[slot].set(st1.cache_len)
-        state.pos[slot] = st1.pos
-        state.active[slot] = True
+        self._commit_prefill_row(state, slot, st1.caches, st1.pos)
         return logits
 
     def retire_slot(self, state: DecodeState, slot: int) -> None:

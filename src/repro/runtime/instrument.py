@@ -42,6 +42,60 @@ def count_dispatches():
         jax.core.Primitive.bind = orig
 
 
+# ---------------------------------------------------------------------------
+# jit-cache / compile-count probe
+# ---------------------------------------------------------------------------
+
+def jit_cache_stats(fns) -> dict:
+    """Snapshot of a jitted-fn registry (e.g. `SlotBufferEngine._fns`).
+
+    `entries` counts registered functions (one per layer-shape/role key);
+    `compiles` sums each function's compiled specializations (one per input
+    shape/dtype signature, via jax's `_cache_size`). Chunked prefill's
+    contract is that `compiles` stays FLAT across distinct prompt lengths —
+    every chunk dispatch reuses the one padded (1, C) specialization — which
+    tests and `bench_prefill --smoke` assert through this probe.
+    """
+    compiles = 0
+    for fn in fns.values():
+        size = getattr(fn, "_cache_size", None)
+        if callable(size):
+            compiles += int(size())
+    return {"entries": len(fns), "compiles": compiles}
+
+
+@dataclass
+class CompileProbe:
+    """Before/after jit-cache snapshots around a block (see
+    `track_compiles`)."""
+    before: dict
+    after: dict = None
+
+    @property
+    def new_entries(self) -> int:
+        return self.after["entries"] - self.before["entries"]
+
+    @property
+    def new_compiles(self) -> int:
+        return self.after["compiles"] - self.before["compiles"]
+
+
+@contextlib.contextmanager
+def track_compiles(engine):
+    """Track jit-cache growth of an engine across a block:
+
+        with track_compiles(eng) as probe:
+            eng.prefill_chunked(prompt)
+        assert probe.new_compiles == 0
+
+    Works on anything exposing a `_fns` jitted-fn registry."""
+    probe = CompileProbe(before=jit_cache_stats(engine._fns))
+    try:
+        yield probe
+    finally:
+        probe.after = jit_cache_stats(engine._fns)
+
+
 @dataclass
 class Stopwatch:
     """Tiny wall-clock section timer feeding the step-size controller.

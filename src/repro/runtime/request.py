@@ -35,6 +35,8 @@ class Request:
     # filled by the engine / scheduler
     output: List[int] = field(default_factory=list)
     admitted_s: float = -1.0                 # left the queue, slot assigned
+    prefill_done_s: float = -1.0             # prompt fully ingested (chunked
+                                             # prefill spans iterations)
     first_token_s: float = -1.0              # prefill done, first token out
     finish_s: float = -1.0
     slot: int = -1

@@ -7,20 +7,31 @@ same `ServingReport`/`RequestMetrics` output — but every decode iteration is
 real JAX execution through the slot-buffer runtime instead of a latency
 model. One `launch.serve --backend {sim,engine}` CLI drives either.
 
-Loop shape (paper §4.1, continuous batching enabled):
+Loop shape (paper §4.1, continuous batching enabled), scheduled at PREFILL
+CHUNK granularity so prompt ingestion never head-of-line blocks the batch:
 
-    admit      -> prefill each admitted prompt through the slot path
-                  (seeding shared-cache residency) into a free batch row
-    decode     -> ONE batched `decode_step` advances every occupied row;
-                  per-layer routing/pre-gate masks are merged across rows
-                  so the adaptive horizon's single (S+1, E) sync covers the
-                  whole batch
+    admit      -> each admitted prompt opens a resumable `PrefillCursor`
+                  (fixed-shape chunked ingestion; `prefill_chunk=0` falls
+                  back to one monolithic prefill at admission)
+    prefill    -> ONE chunk of ONE in-flight cursor per iteration
+                  (shortest-remaining-first, so a short prompt admitted
+                  behind a long one still reaches its first token quickly;
+                  cursor aging guarantees any prompt ingests within
+                  n_chunks * max(prefill_starve_limit + 1, in-flight
+                  cursors) iterations even under a sustained stream of
+                  shorter arrivals)
+    decode     -> ONE batched `decode_step` advances every FULLY-PREFILLED
+                  row; per-layer routing/pre-gate masks are merged across
+                  rows so the adaptive horizon's single (S+1, E) sync
+                  covers the whole batch
     sample     -> per-request temperature and PRNG stream via
                   `sampler.sample_rows` (mixed greedy/sampled in one step)
     retire     -> finished rows free their slot for the next waiting
                   request; admission re-consults the controller snapshot
 
-Timing is wall-clock: TTFT/TPOT/queue-delay are measured, not modeled.
+Timing is wall-clock: TTFT/TPOT/queue-delay are measured, not modeled, and
+TTFT is attributed across queue / prefill / first-step
+(`RequestMetrics.prefill_s` / `first_step_s`).
 """
 from __future__ import annotations
 
@@ -46,6 +57,19 @@ class EngineServingConfig:
     admission_cap: bool = True
     admission_headroom: float = 1.0
     max_iterations: int = 100_000
+    # chunked prefill: fixed prompt-chunk width interleaved with decode
+    # (compile count independent of prompt-length diversity). 0 = monolithic
+    # whole-prompt prefill at admission (the head-of-line baseline).
+    # Architectures without chunk support (recurrent mixers, sliding
+    # windows) fall back to monolithic automatically.
+    prefill_chunk: int = 32
+    # aging bound for the shortest-remaining-first chunk scheduler: a cursor
+    # skipped this many consecutive iterations is advanced regardless, so a
+    # long prompt's prefill finishes within
+    # n_chunks * max(limit + 1, concurrent cursors) iterations (aged
+    # cursors rotate when more than limit+1 starve at once) even under a
+    # sustained stream of shorter arrivals
+    prefill_starve_limit: int = 4
     # arrival handling: requests with arrival_s in the future are gated on
     # wall-clock; the loop naps this long when the queue is empty
     idle_sleep_s: float = 1e-4
@@ -79,18 +103,35 @@ class ServingEngine:
         self._row_key = [self.base_key] * self.cfg.max_batch
         self._row_temp = np.zeros(self.cfg.max_batch, np.float32)
         self._row_step = [0] * self.cfg.max_batch
+        # in-flight chunked prefills: [(Request, PrefillCursor)]
+        self._prefills: List = []
+        self._chunked = (self.cfg.prefill_chunk > 0
+                         and engine.chunked_prefill_supported)
 
     # -- admission-control working-set estimate -----------------------------
+    def _ws_bucket(self, n: int) -> int:
+        """Pad prompt lengths to the engine's KV-prefix buckets
+        (`SlotBufferEngine._kv_bucket`: next power of two, floor 8, clamped
+        to max_seq) so the working-set predictor compiles per BUCKET, not
+        per distinct prompt length — and stays aligned with the chunked
+        prefill's bucket set, keeping total compiles one-per-bucket."""
+        return self.engine._kv_bucket(n, self.engine.max_seq)
+
     def predict_working_set(self, req: Request) -> float:
         """Predict the request's distinct-experts-per-layer working set by
         routing its prompt token embeddings through every MoE router (one
         jitted dispatch over the stacked routers; no FFN compute). A
         topic-anchored prompt concentrates on few experts, a diverse prompt
         spreads — exactly the signal the admission cap needs to keep
-        co-batched working sets inside the shared cache."""
+        co-batched working sets inside the shared cache. The prompt is
+        right-padded to a length bucket (padding masked out of the distinct
+        count), so estimates cost one compile per bucket."""
         eng = self.engine
-        counts = self._ws_fn()(eng.params, jnp.asarray(
-            np.asarray(req.prompt, np.int32)[None, :]))
+        prompt = np.asarray(req.prompt, np.int32)
+        T = int(prompt.size)
+        buf = np.zeros((1, self._ws_bucket(T)), np.int32)
+        buf[0, :T] = prompt.reshape(-1)
+        counts = self._ws_fn()(eng.params, jnp.asarray(buf), T)
         return float(np.mean(np.asarray(counts)))
 
     def _ws_fn(self):
@@ -99,14 +140,18 @@ class ServingEngine:
             model, stack = eng.model, eng._router_stack
             k = eng.cfg.moe.top_k
 
-            def fn(params, tokens):
+            def fn(params, tokens, n_valid):
                 x = model.embed(params, tokens)[0].astype(jnp.float32)
                 logits = jnp.einsum("td,lde->lte", x, stack)
                 _, ids = jax.lax.top_k(logits, k)          # (L, T, k)
                 E = stack.shape[-1]
+                # padding rows scatter out of range and drop from the count
+                ids = jnp.where(jnp.arange(ids.shape[1])[None, :, None]
+                                < n_valid, ids, E)
                 hot = jnp.zeros((ids.shape[0], E), jnp.bool_)
                 hot = hot.at[jnp.arange(ids.shape[0])[:, None],
-                             ids.reshape(ids.shape[0], -1)].set(True)
+                             ids.reshape(ids.shape[0], -1)].set(
+                                 True, mode="drop")
                 return hot.sum(axis=1)                      # (L,) distinct
             eng._fns["predict_ws"] = jax.jit(fn)
         return eng._fns["predict_ws"]
@@ -114,10 +159,21 @@ class ServingEngine:
     # -- lifecycle helpers ---------------------------------------------------
     def _admit_one(self, req: Request, slot: int, state, now_s: float,
                    report: ServingReport, it: int) -> None:
+        """Monolithic admission path: whole-prompt prefill, then the first
+        token — all inside one serving iteration (the head-of-line
+        baseline chunked serving exists to beat)."""
         eng = self.engine
         req.admitted_s = now_s
         logits = eng.prefill_into(state, slot, np.asarray(
             req.prompt, np.int32)[None, :])
+        req.prefill_done_s = time.perf_counter() - self._t0
+        self._emit_first_token(req, slot, logits, now_s, report, it)
+
+    def _emit_first_token(self, req: Request, slot: int, logits,
+                          t_start: float, report: ServingReport,
+                          it: int) -> None:
+        """Sample the prompt's first output token and stamp TTFT."""
+        eng = self.engine
         key = jax.random.fold_in(self.base_key, req.request_id)
         tok = sample(logits, key, req.temperature)
         self._row_key[slot] = key
@@ -128,9 +184,47 @@ class ServingEngine:
         if self.cfg.trace_logits:
             self.logits_trace.setdefault(req.request_id, []).append(
                 np.asarray(logits)[0])
-        sm = StepMetrics(step=it, compute_s=req.first_token_s - now_s,
+        sm = StepMetrics(step=it, compute_s=req.first_token_s - t_start,
                          step_size=eng.controller.s)
         report.run.add(sm)
+
+    def _advance_prefill(self, state, report: ServingReport, it: int,
+                         finish) -> None:
+        """One chunk of ONE in-flight prefill cursor per serving iteration.
+
+        Shortest-remaining-first: a short prompt admitted behind a long one
+        overtakes it chunk-wise, so its TTFT is a few chunks instead of the
+        long prompt's whole ingestion. SRF alone could starve a long cursor
+        forever under a sustained stream of shorter arrivals (freed slots
+        keep refilling with shorter cursors), so cursors AGE: one skipped
+        `prefill_starve_limit` consecutive iterations is advanced
+        regardless, bounding any prompt's ingestion to
+        n_chunks * max(limit + 1, concurrent cursors) prefill-iterations
+        (cursors capped by max_batch; aged ones rotate)."""
+        eng = self.engine
+        t0 = time.perf_counter() - self._t0
+        self._prefills.sort(key=lambda rc: rc[1].remaining)
+        pick = max(range(len(self._prefills)),
+                   key=lambda i: self._prefills[i][1].skipped)
+        if self._prefills[pick][1].skipped < self.cfg.prefill_starve_limit:
+            pick = 0                       # nobody starving: pure SRF
+        req, cursor = self._prefills[pick]
+        for _, other in self._prefills:
+            other.skipped += 1
+        cursor.skipped = 0
+        eng.prefill_chunk(cursor)
+        if not cursor.done:
+            report.run.add(StepMetrics(
+                step=it, compute_s=(time.perf_counter() - self._t0) - t0,
+                step_size=eng.controller.s))
+            return
+        self._prefills.pop(pick)
+        logits = eng.finish_prefill_into(state, req.slot, cursor)
+        req.prefill_done_s = time.perf_counter() - self._t0
+        self._emit_first_token(req, req.slot, logits, t0, report, it)
+        if req.done:                 # 1-token request: done at prefill
+            finish(req)
+            self.batcher.release(req)
 
     # -- the serving loop ----------------------------------------------------
     def serve(self, requests: List[Request]) -> ServingReport:
@@ -182,6 +276,15 @@ class ServingEngine:
                 continue
 
             for req in self.batcher.admit(now=tnow):
+                if self._chunked:
+                    # chunked: admission only OPENS the cursor; ingestion is
+                    # scheduled one chunk per iteration below
+                    req.admitted_s = now()
+                    cursor = eng.start_prefill(
+                        np.asarray(req.prompt, np.int32),
+                        cfg.prefill_chunk)
+                    self._prefills.append((req, cursor))
+                    continue
                 self._admit_one(req, req.slot, state, now(), report, it)
                 it += 1
                 if req.done:          # 1-token request: done at prefill
@@ -190,7 +293,15 @@ class ServingEngine:
                     # release bookkeeping via batcher (slot back to pool)
                     self.batcher.release(req)
 
-            active_slots = self.batcher.active_slots()
+            # -- one prefill chunk per iteration, interleaved with decode --
+            if self._prefills:
+                self._advance_prefill(state, report, it, finish)
+                it += 1
+
+            # decode advances only fully-prefilled rows (state.active);
+            # rows mid-prefill hold their slot but sit out the batch
+            active_slots = [s for s in self.batcher.active_slots()
+                            if state.active[s]]
             if not active_slots:
                 continue
 
