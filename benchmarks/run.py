@@ -15,7 +15,7 @@ from benchmarks.common import Csv
 
 def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
-    from benchmarks import (bench_decode, bench_prefill,
+    from benchmarks import (bench_cache_aware, bench_decode, bench_prefill,
                             bench_serving_engine, bench_slotpath,
                             fig2_step_size, fig3_batch_size, fig4_diversity,
                             fig7_overall_latency, fig8_predictor_accuracy,
@@ -29,7 +29,7 @@ def main() -> None:
         "fig10": fig10_lru, "fig11": fig11_cache_aware_routing,
         "serving": fig_serving, "slotpath": bench_slotpath,
         "decode": bench_decode, "serving_engine": bench_serving_engine,
-        "prefill": bench_prefill,
+        "prefill": bench_prefill, "cache_aware": bench_cache_aware,
         "kernels": kernels_bench, "roofline": roofline,
     }
     csv = Csv()

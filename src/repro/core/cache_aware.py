@@ -1,10 +1,27 @@
 """Cache-aware routing (paper §3.4).
 
-Tokens whose experts are already resident get scheduling priority; tokens
-requiring swap-ins are deferred so their transfers overlap with the
-resident-group compute. `split_by_residency` produces the priority
-permutation; `overlap_schedule` computes how much of the miss latency is
-hidden under compute.
+Two mechanisms, both keyed on expert residency:
+
+1. *Scheduling* (offline evaluation + simulator): tokens whose experts are
+   already resident get priority; tokens requiring swap-ins are deferred so
+   their transfers overlap with the resident-group compute.
+   `split_by_residency` produces the priority permutation;
+   `overlap_schedule` computes how much miss latency is hidden.
+
+2. *Bounded routing perturbation* (live serving path): non-resident
+   experts' router logits are biased DOWN by a strength delta >= 0 before
+   top-k, so a non-resident expert loses its slot only to a resident
+   expert within delta logits of it — the "top-k tie-break" view. The
+   same delta is a provable quality bound: with one-sided bias
+   b_i in {-delta, 0}, the biased distribution q satisfies
+
+       KL(p || q) = sum_i p_i * (delta * m_i) - log(Z / Z')  <=  delta
+
+   (m_i = 1 for non-resident experts, Z/Z' in [1, e^delta]), so router
+   divergence is at most `delta` nats regardless of the residency
+   pattern. `residency_logit_bias` builds the bias on device (jit-safe);
+   `bias_reroute` is the trace-level numpy mirror used by the serving
+   simulator so both backends apply one policy.
 """
 from __future__ import annotations
 
@@ -64,3 +81,65 @@ def sequential_schedule(layer_compute_s: float, transfer_ready_s: float,
     """Conventional path: block the whole layer until transfers finish."""
     start = max(now, transfer_ready_s)
     return start + layer_compute_s, max(0.0, transfer_ready_s - now)
+
+
+# ---------------------------------------------------------------------------
+# Bounded routing perturbation (live path)
+# ---------------------------------------------------------------------------
+
+def residency_logit_bias(resident_mask, strength: float):
+    """(..., E) bool/int residency mask -> (..., E) float32 additive bias.
+
+    Resident experts get 0, non-resident get -strength; adding this to the
+    router logits before softmax/top-k yields the bounded perturbation
+    described in the module docstring (KL(p_orig || p_biased) <= strength
+    nats). Works on numpy and jax arrays and is jit-traceable; the engine
+    builds the mask host-side from the slot table (in-flight assigned
+    transfers count as resident — they will land before dispatch) and
+    pushes only this small (E,) array to device, no extra host syncs.
+    """
+    import jax.numpy as jnp
+    xp = jnp if not isinstance(resident_mask, np.ndarray) else np
+    m = xp.asarray(resident_mask)
+    return (m.astype(xp.float32) - 1.0) * xp.float32(strength)
+
+
+def bias_reroute(assignments: np.ndarray, logits: np.ndarray,
+                 resident: Set[int], strength: float
+                 ) -> Tuple[np.ndarray, int]:
+    """Trace-level mirror of the engine's biased routing for the simulator.
+
+    assignments: (T, k) expert ids from the unbiased trace; logits: (E,)
+    router-logit estimate for this layer (the simulator uses pre-gate
+    log-probabilities — traces don't carry per-layer logits). Each
+    non-resident assignment is swapped to the best resident expert not
+    already in its row whose logit is within `strength` of the original —
+    exactly the set of swaps the on-device biased top-k could make, so the
+    simulated miss reduction tracks the engine's. Returns
+    (new_assignments, n_rerouted).
+    """
+    a = np.asarray(assignments)
+    if a.ndim == 1:
+        a = a.reshape(-1, 1)
+    lg = np.asarray(logits, np.float64)
+    E = lg.shape[0]
+    if strength <= 0.0 or not resident or len(resident) >= E:
+        return a, 0
+    res_ids = np.asarray(sorted(resident), np.int64)
+    out = a.copy()
+    n_rerouted = 0
+    for t in range(out.shape[0]):
+        row = out[t]
+        for j in range(row.shape[0]):
+            e = int(row[j])
+            if e in resident:
+                continue
+            # resident candidates not already assigned in this row, within
+            # the bias window of the displaced expert's logit
+            cand = [c for c in res_ids
+                    if c not in row and lg[c] >= lg[e] - strength]
+            if not cand:
+                continue
+            row[j] = max(cand, key=lambda c: lg[c])
+            n_rerouted += 1
+    return out, n_rerouted

@@ -35,6 +35,14 @@ class Policy:
     blocking_swap_out: bool = False
     protect_early_layers: bool = True
     cum_prob_threshold: float = 0.7
+    # §3.4 bounded routing perturbation strength delta (router-logit units):
+    # non-resident assignments may swap to a resident expert within delta
+    # logits, so router KL vs unperturbed routing stays <= delta nats.
+    # 0 keeps routing untouched. Requires cache_aware. Mirrors the live
+    # engine's `SlotBufferEngine.set_route_bias`; when `step_cfg` sets
+    # route_bias_max > 0 the shared controller ramps the effective strength
+    # within [0, route_bias] adaptively.
+    route_bias: float = 0.0
     step_cfg: StepSizeConfig = field(default_factory=StepSizeConfig)
 
 

@@ -25,6 +25,7 @@ class StepMetrics:
     n_misses: int = 0
     n_prefetched: int = 0
     n_overfetched: int = 0
+    n_rerouted: int = 0           # §3.4 assignments swapped to resident experts
     step_size: int = 0
 
     @property

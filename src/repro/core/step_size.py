@@ -35,6 +35,15 @@ class StepSizeConfig:
     # happening, stalls are CAPACITY thrash, not bandwidth lateness —
     # raising S then adds outstanding prefetches and feeds the spiral.
     capacity_guard: bool = True
+    # §3.4 cache-aware routing strength ceiling (router-logit units): the
+    # controller modulates its `route_bias` within [0, route_bias_max] from
+    # the same stall/overfetch thresholds that move S. 0 keeps the
+    # perturbation off entirely (the controller never raises it).
+    route_bias_max: float = 0.0
+    # fraction of route_bias_max moved per threshold event (stall -> up,
+    # overfetch -> down): stalls ramp the residency bias toward the ceiling
+    # in 1/route_bias_step events; sustained overfetch relaxes it back.
+    route_bias_step: float = 0.25
 
 
 def expected_active_experts(pregate_probs: np.ndarray,
@@ -47,7 +56,11 @@ def expected_active_experts(pregate_probs: np.ndarray,
     p = p / max(p.sum(), 1e-12)
     order = np.sort(p)[::-1]
     cum = np.cumsum(order)
-    return int(np.searchsorted(cum, threshold) + 1)
+    # searchsorted returns E when threshold exceeds the reachable cumulative
+    # mass (e.g. threshold=1.0 against a float sum of 0.9999...), which
+    # would report E+1 "active" experts and inflate the initial-S formula —
+    # the count is a set size, clamp it to [1, E]
+    return int(np.clip(np.searchsorted(cum, threshold) + 1, 1, len(cum)))
 
 
 def initial_step_size(n_experts_active: float, expert_bytes: float,
@@ -71,6 +84,15 @@ class StepSizeController:
     overfetch_counter: int = 0
     bandwidth_est: float = 16e9      # C_s, bytes/s (updated from transfers)
     layer_time_est: float = 1e-3     # T_l, seconds (updated from compute)
+    # §3.4 cache-aware routing strength (router-logit units), modulated by
+    # the same stall/overfetch thresholds that move S: stalls push routing
+    # toward already-resident experts, sustained overfetch (spare capacity)
+    # relaxes the perturbation back toward gate-only routing.
+    route_bias: float = 0.0
+    # capacity-guard observability: times the §3.3.2 guard consumed an
+    # overfetch instead of raising S. Without this, "S held flat by the
+    # guard under churn" is indistinguishable from "no stalls at all".
+    guard_hits: int = 0
     # history for diagnostics / EXPERIMENTS.md
     s_history: list = field(default_factory=list)
 
@@ -88,15 +110,31 @@ class StepSizeController:
         return self.s
 
     # -- feedback ------------------------------------------------------------
+    def _move_route_bias(self, direction: float) -> None:
+        """Shift the §3.4 routing-perturbation strength one threshold step
+        (fraction `route_bias_step` of the ceiling) up or down, clamped to
+        [0, route_bias_max]. A zero ceiling keeps the perturbation off."""
+        m = self.cfg.route_bias_max
+        if m <= 0.0:
+            return
+        self.route_bias = float(np.clip(
+            self.route_bias + direction * self.cfg.route_bias_step * m,
+            0.0, m))
+
     def record_stall(self, n: int = 1) -> None:
         self.stall_counter += n
         if self.stall_counter >= self.cfg.stall_threshold:
             self.stall_counter = 0
+            # stalls also push routing toward resident experts (§3.4): the
+            # residency bias attacks the same misses S would, without
+            # spending link bandwidth
+            self._move_route_bias(+1.0)
             if self.cfg.capacity_guard and self.overfetch_counter > 0:
                 # cache is evicting unused prefetches: the stall is capacity
                 # thrash — deeper lookahead would make it worse. Consume one
                 # overfetch instead of raising S (§3.3.2 coordination).
                 self.overfetch_counter -= 1
+                self.guard_hits += 1
                 return
             if self.s < self.cfg.s_max:
                 self.s += 1
@@ -106,6 +144,9 @@ class StepSizeController:
         self.overfetch_counter += n
         if self.overfetch_counter >= self.cfg.overfetch_threshold:
             self.overfetch_counter = 0
+            # spare residency headroom: relax the routing perturbation
+            # before shrinking the prefetch horizon
+            self._move_route_bias(-1.0)
             if self.s > self.cfg.s_min:
                 self.s -= 1
                 self.s_history.append(self.s)
@@ -140,6 +181,8 @@ class StepSizeController:
             "overfetch_counter": self.overfetch_counter,
             "bandwidth_est": self.bandwidth_est,
             "layer_time_est": self.layer_time_est,
+            "route_bias": self.route_bias,
+            "guard_hits": self.guard_hits,
             "s_history": list(self.s_history),
         }
 

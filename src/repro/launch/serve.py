@@ -68,11 +68,15 @@ def _serve_engine(args, cfg, specs, rng) -> None:
     sb = SlotBufferEngine(cfg, eng.params, eng.model,
                           n_slots_per_layer=slots, max_seq=max_seq)
     srv = ServingEngine(sb, EngineServingConfig(
-        max_batch=args.batch, prefill_chunk=args.prefill_chunk))
+        max_batch=args.batch, prefill_chunk=args.prefill_chunk,
+        route_bias=args.route_bias,
+        route_bias_adaptive=args.route_bias_adaptive))
     rep = srv.serve(requests)
     s = rep.summary()
     print(f"engine backend: slots/layer={slots} batch={args.batch} "
           f"S={sb.controller.s} "
+          f"route_bias={args.route_bias}"
+          f"{'(adaptive)' if args.route_bias_adaptive else ''} "
           f"prefill_chunk={args.prefill_chunk if srv._chunked else 'mono'}")
     print(f"  {'engine':14s} tput={s['throughput_tok_s']:8.1f}tok/s "
           f"ttft_p50={s['ttft_p50_s']*1e3:8.3f}ms "
@@ -105,6 +109,14 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="engine backend: fixed prompt-chunk width "
                          "interleaved with decode (0 = monolithic prefill)")
+    ap.add_argument("--route-bias", type=float, default=0.0,
+                    help="cache-aware routing strength delta (router-logit "
+                         "units; router KL vs unperturbed <= delta nats). "
+                         "0 = off (bit-exact routing)")
+    ap.add_argument("--route-bias-adaptive", action="store_true",
+                    help="let the step-size controller ramp the routing "
+                         "bias within [0, --route-bias] from its "
+                         "stall/overfetch thresholds")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.requests < 1:
@@ -168,7 +180,14 @@ def main() -> None:
           f"capacity={sim.capacity_experts}/{L*M} slots={args.batch}")
     wl = ServingWorkload(L, M, trace.top_k, eng.routers(),
                          requests, model=cfg.name, name=args.workload)
-    for pol in [baseline(), pregate_fixed(2), promoe_like(2), expertflow()]:
+    policies = [baseline(), pregate_fixed(2), promoe_like(2), expertflow()]
+    if args.route_bias > 0.0:
+        # the engine backend's routing perturbation, mirrored trace-level
+        ef_rb = expertflow()
+        ef_rb.name = f"expertflow_rb{args.route_bias:g}"
+        ef_rb.route_bias = args.route_bias
+        policies.append(ef_rb)
+    for pol in policies:
         rep = simulate_serving(wl, sim, hw, pol, forest=forest, cfg=scfg)
         s = rep.summary()
         print(f"  {s['policy']:14s} stall={s['stall_s']*1e3:9.3f}ms "

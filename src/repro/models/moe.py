@@ -47,10 +47,24 @@ def init_moe_params(key, d_model: int, moe, dtype=jnp.bfloat16):
 
 
 def route(router_w: jnp.ndarray, x: jnp.ndarray, top_k: int,
-          norm_topk: bool = True) -> RouterOutput:
-    """Top-k softmax routing. x: (T, d) -> assignments over E experts."""
+          norm_topk: bool = True,
+          logit_bias: Optional[jnp.ndarray] = None) -> RouterOutput:
+    """Top-k softmax routing. x: (T, d) -> assignments over E experts.
+
+    `logit_bias` ((E,) or (T, E) float32, additive) implements §3.4
+    cache-aware routing: the engine passes 0 for resident experts and
+    -strength for non-resident ones, so a non-resident expert loses its
+    top-k slot only to a resident expert within `strength` logits of it.
+    Because the bias is one-sided in [-strength, 0], the router
+    distribution satisfies KL(p_orig || p_biased) <= strength nats (see
+    `core.cache_aware.residency_logit_bias`). The returned logits/probs
+    are the BIASED ones — downstream gate weights and pre-gate signals
+    must agree with the assignments actually dispatched.
+    """
     logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
                         router_w.astype(jnp.float32))
+    if logit_bias is not None:
+        logits = logits + logit_bias.astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
     gates, expert_ids = jax.lax.top_k(probs, top_k)
     if norm_topk:

@@ -117,14 +117,23 @@ class ContinuousBatcher:
             admitted.append(req)
         return admitted
 
+    def _free(self, slot: int, req: Request) -> None:
+        """The ONE retirement path (shared by `release` and `step`): drop
+        the slot->request binding, return the slot to the pool, and CLEAR
+        `req.slot` — a retired request holding its old slot id would alias
+        whichever request reuses that slot in later slot-keyed lookups
+        (e.g. logits traces)."""
+        del self.active[slot]
+        req.slot = -1
+        self.free_slots.append(slot)
+        self.free_slots.sort()
+        self.stats.completed += 1
+
     def release(self, req: Request) -> None:
         """Free a request's slot outside the `step()` path (e.g. a request
         whose full output was produced at prefill)."""
         if req.slot in self.active and self.active[req.slot] is req:
-            del self.active[req.slot]
-            self.free_slots.append(req.slot)
-            self.free_slots.sort()
-            self.stats.completed += 1
+            self._free(req.slot, req)
 
     def step(self, next_tokens: Dict[int, int]) -> List[Request]:
         """Record one decode iteration's sampled tokens; returns finished."""
@@ -133,15 +142,15 @@ class ContinuousBatcher:
         self.stats.occupancy_sum += len(self.active) / self.max_batch
         for slot, tok in next_tokens.items():
             req = self.active.get(slot)
-            if req is None:
+            # mirror release()'s identity guard: a caller passing a stale
+            # slot id (e.g. after a retire-then-readmit race) must not feed
+            # tokens to — or retire — the slot's NEW occupant
+            if req is None or req.slot != slot:
                 continue
             req.output.append(int(tok))
             if req.done:
                 finished.append(req)
-                del self.active[slot]
-                self.free_slots.append(slot)
-                self.free_slots.sort()
-                self.stats.completed += 1
+                self._free(slot, req)
         return finished
 
     @property

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.cache import TwoLevelLRU
+from repro.core.cache_aware import residency_logit_bias
 from repro.core.expert_buffer import (HostExpertStore, SlotTable, make_buffer,
                                       swap_in, swap_in_many)
 from repro.core.prefetcher import Prefetcher, TransferLink
@@ -238,7 +239,7 @@ def _attn_only_decode(p, cfg, spec, x, cache, cache_len):
     return layer_decode(stripped, cfg, spec_no_ffn, x, cache, cache_len)
 
 
-def _route_ffn_entry(p, cfg, x, active=None):
+def _route_ffn_entry(p, cfg, x, active=None, rbias=None):
     """Shared FFN-entry block of the jitted pre fns: ffn-norm the attention
     output, flatten, route on device, build the (E,) needed mask.
     Returns (flat, RouterOutput, needed).
@@ -247,12 +248,18 @@ def _route_ffn_entry(p, cfg, x, active=None):
     over active rows only, so idle slots' garbage rows cannot demand swaps.
     All rows still flow through the FFN; inactive rows' outputs are ignored
     by the caller (and their non-resident experts fall to the dead sentinel
-    slot inside `moe_slotbuf`)."""
+    slot inside `moe_slotbuf`).
+
+    `rbias` (§3.4 cache-aware routing): optional (E,) additive router-logit
+    bias (0 for resident experts, -strength otherwise; see
+    `core.cache_aware.residency_logit_bias`). Passing None traces the exact
+    pre-bias graph, so engines with the perturbation disabled stay bit-exact
+    with builds that predate it."""
     from repro.models.transformer import _zc
     h2 = rms_norm(x, p["ffn_norm"], cfg.norm_eps, zero_centered=_zc(cfg))
     flat = h2.reshape(-1, x.shape[-1])
     r = moe_mod.route(p["moe"]["router"], flat, cfg.moe.top_k,
-                      cfg.moe.router_norm_topk)
+                      cfg.moe.router_norm_topk, logit_bias=rbias)
     E = cfg.moe.num_experts
     needed = jnp.zeros((E,), jnp.bool_)
     ids = r.expert_ids
@@ -384,7 +391,8 @@ class SlotBufferEngine:
                  link_bandwidth: float = 64e9, max_seq: int = 256,
                  step_size: Optional[int] = None,
                  controller: Optional[StepSizeController] = None,
-                 pregate_margin: int = 2):
+                 pregate_margin: int = 2, route_bias: float = 0.0,
+                 route_bias_adaptive: bool = False):
         assert cfg.moe is not None
         self.cfg = cfg
         self.model = model
@@ -448,6 +456,14 @@ class SlotBufferEngine:
         # lookahead window as ONE device slice
         self._router_stack = jnp.stack(
             [self._p[i]["moe"]["router"] for i in self.moe_layer_ids])
+        # §3.4 cache-aware routing: bounded residency perturbation of the
+        # decode routers (see `set_route_bias`). 0 disables it entirely —
+        # the jitted fns are then called exactly as without the feature, so
+        # disabled-engine logits are bit-exact with pre-feature builds.
+        self.route_bias = 0.0
+        self.route_bias_adaptive = False
+        if route_bias:
+            self.set_route_bias(route_bias, adaptive=route_bias_adaptive)
 
     # -- jitted per-layer functions (compiled once per layer shape) ---------
     @staticmethod
@@ -650,16 +666,21 @@ class SlotBufferEngine:
         `batched` (continuous batching): the fn additionally takes an
         `active` (B,) bool mask — cache_len is then per-row and the needed
         mask is the union over active rows only — so one call still serves
-        the whole co-batched decode iteration."""
+        the whole co-batched decode iteration.
+
+        `rbias` (cache-aware serving): optional (E,) residency logit bias
+        for this layer's router. jit re-traces on argument structure, so
+        calls with rbias=None compile the EXACT pre-bias graph — engines
+        with the perturbation off are bit-exact by construction."""
         key = ("pre_decode", self._spec_key(spec), batched)
         if key not in self._fns:
             cfg, cspec = self.cfg, self._spec_key(spec)
 
-            def fn(p, x, cache, cache_len, active=None):
+            def fn(p, x, cache, cache_len, active=None, rbias=None):
                 stripped, spec_nf = split_ffn_params(p, cspec)
                 x, new_cache = layer_decode(stripped, cfg, spec_nf, x, cache,
                                             cache_len)
-                flat, r, needed = _route_ffn_entry(p, cfg, x, active)
+                flat, r, needed = _route_ffn_entry(p, cfg, x, active, rbias)
                 return x, flat, r, needed, new_cache
             self._fns[key] = jax.jit(fn)
         return self._fns[key]
@@ -672,18 +693,24 @@ class SlotBufferEngine:
         `batched`: idle batch slots are masked out of the union (their rows
         scatter out of range, mode="drop"), so one host sync still covers
         the whole co-batched decode iteration without garbage rows inflating
-        the predicted working set."""
+        the predicted working set.
+
+        `rbias` (cache-aware serving): optional (n_next, E) per-target-layer
+        residency bias so predictions agree with the biased routing those
+        layers will run; None traces the exact pre-bias graph."""
         key = ("pregate", n_next, batched)
         if key not in self._fns:
             cfg = self.cfg
             E = cfg.moe.num_experts
             k_pred = min(E, cfg.moe.top_k + self.pregate_margin)
 
-            def fn(flat, needed, routers, active=None):
+            def fn(flat, needed, routers, active=None, rbias=None):
                 rows = [needed[None]]
                 for j in range(n_next):
                     rn = moe_mod.route(routers[j], flat, k_pred,
-                                       cfg.moe.router_norm_topk)
+                                       cfg.moe.router_norm_topk,
+                                       logit_bias=None if rbias is None
+                                       else rbias[j])
                     ids = rn.expert_ids
                     if active is not None:
                         ids = jnp.where(active[:, None], ids, E)
@@ -693,6 +720,52 @@ class SlotBufferEngine:
                 return jnp.concatenate(rows, axis=0)
             self._fns[key] = jax.jit(fn)
         return self._fns[key]
+
+    # -- cache-aware routing (§3.4) ------------------------------------------
+    def set_route_bias(self, strength: float, adaptive: bool = False) -> None:
+        """Enable/adjust the bounded residency perturbation of decode
+        routing: non-resident experts' router logits drop by up to
+        `strength` before top-k, so a non-resident expert loses its slot
+        only to a resident expert within `strength` logits — and router
+        KL vs unperturbed is provably <= strength nats
+        (`core.cache_aware.residency_logit_bias`).
+
+        `adaptive=True` makes `strength` a CEILING: the shared
+        `StepSizeController` ramps its `route_bias` within [0, strength]
+        from the same stall/overfetch thresholds that move S, so the
+        perturbation only pays its quality cost while residency is actually
+        churning. Strength 0 disables the feature (bit-exact logits)."""
+        self.route_bias = float(strength)
+        self.route_bias_adaptive = bool(adaptive)
+        if adaptive and self.route_bias > 0.0 \
+                and self.controller.cfg.route_bias_max <= 0.0:
+            self.controller.cfg = dataclasses.replace(
+                self.controller.cfg, route_bias_max=self.route_bias)
+
+    def _route_bias_strength(self) -> float:
+        """Current perturbation strength delta (router-logit units)."""
+        if self.route_bias_adaptive:
+            return float(min(self.controller.route_bias, self.route_bias))
+        return self.route_bias
+
+    def _residency_bias(self, li: int) -> jnp.ndarray:
+        """(E,) device bias for MoE layer li from the HOST slot table — the
+        same state every residency decision already reads, so this adds no
+        device->host sync. In-flight assigned transfers count as resident
+        (their slots are assigned): they land before the FFN dispatch, so
+        routing to them costs nothing."""
+        mask = self.table.layer_slot_map(li) >= 0
+        return jnp.asarray(
+            residency_logit_bias(mask, self._route_bias_strength()))
+
+    def _pregate_bias(self, li: int, s: int) -> jnp.ndarray:
+        """(s, E) bias stack for the pre-gated horizon (layers li+1..li+s),
+        each row from its own layer's residency, so speculative predictions
+        agree with the biased routing those layers will actually run."""
+        strength = self._route_bias_strength()
+        rows = np.stack([self.table.layer_slot_map(li + 1 + j) >= 0
+                         for j in range(s)])
+        return jnp.asarray(residency_logit_bias(rows, strength))
 
     # -- adaptive horizon ----------------------------------------------------
     def _s_eff(self) -> int:
@@ -712,14 +785,20 @@ class SlotBufferEngine:
         return self._router_stack[li + 1: li + 1 + s]
 
     def _sync_masks_dev(self, li: int, s: int, flat, needed_dev,
-                        active_dev=None):
+                        active_dev=None, rbias=None):
         """Device-side (s+1, E) sync mask block: row 0 the layer's actual
         needed set, rows 1.. the pre-gated horizon. At s == 0 the pregate
         dispatch is pure overhead — the needed mask alone suffices.
-        `active_dev`: (B,) bool for batched serving (idle rows masked)."""
+        `active_dev`: (B,) bool for batched serving (idle rows masked).
+        `rbias`: optional (s, E) cache-aware bias for the horizon routers
+        (None keeps the exact pre-bias traces)."""
         if s == 0:
             return needed_dev[None]
         self.stats.jit_calls += 1
+        if rbias is not None:
+            return self._pregate_fn(s, batched=active_dev is not None)(
+                flat, needed_dev, self._router_slice(li, s), active_dev,
+                rbias)
         if active_dev is not None:
             return self._pregate_fn(s, batched=True)(
                 flat, needed_dev, self._router_slice(li, s), active_dev)
@@ -1263,7 +1342,11 @@ class SlotBufferEngine:
         the first wrong layer and replays it as a sync layer (the stall
         path). Outputs are therefore ALWAYS bit-exact versus
         `reference_decode_step` through the same jitted functions — the
-        horizon only moves how often the host blocks.
+        horizon only moves how often the host blocks. (With
+        `set_route_bias(delta > 0)` routing itself is perturbed within the
+        delta bound, so outputs intentionally diverge from the unperturbed
+        oracle; at delta = 0 the pre-bias traces are used and exactness
+        holds unchanged.)
 
         Batched serving states (`state.batched`, built by
         `alloc_decode_state`/`prefill_into`) run the SAME control flow: each
@@ -1275,6 +1358,10 @@ class SlotBufferEngine:
         neighbours and residency is guaranteed (or replayed) before each
         FFN dispatch."""
         assert self.fused, "incremental decode requires the fused runtime"
+        # cache-aware routing is gated on the CEILING, not the live strength:
+        # an adaptive engine at strength 0 keeps using the biased traces
+        # (with a zero bias) so ramping costs no recompiles mid-serve
+        ca = self.route_bias > 0.0
         batched = state.batched
         if batched:
             act = np.asarray(state.active, bool)
@@ -1383,7 +1470,13 @@ class SlotBufferEngine:
                 i += 1
                 continue
             x_in, old_c = x, caches[i]
-            if batched:
+            if ca:
+                # cache-aware routing: this layer's residency bias rides the
+                # pre dispatch (host mask push only — no extra syncs)
+                x2, flat, r, needed_dev, c2 = self._pre_decode_fn(
+                    spec, batched=batched)(p, x_in, old_c, clen, active_dev,
+                                           self._residency_bias(li))
+            elif batched:
                 x2, flat, r, needed_dev, c2 = self._pre_decode_fn(
                     spec, batched=True)(p, x_in, old_c, clen, active_dev)
             else:
@@ -1412,7 +1505,9 @@ class SlotBufferEngine:
                 continue
             # ---- sync layer: ONE blocking pull for verify + routing + S ---
             s = self._horizon(li)
-            masks = self._sync_masks_dev(li, s, flat, needed_dev, active_dev)
+            masks = self._sync_masks_dev(
+                li, s, flat, needed_dev, active_dev,
+                self._pregate_bias(li, s) if ca and s > 0 else None)
             sync, fail = pull_and_verify(masks)
             if fail >= 0:
                 i, li, x = replay_from(fail)

@@ -75,6 +75,14 @@ class EngineServingConfig:
     idle_sleep_s: float = 1e-4
     # record per-request decode logits rows (tests / debugging)
     trace_logits: bool = False
+    # §3.4 cache-aware routing knobs, applied to the engine at construction
+    # (None = leave the engine's own setting untouched). `route_bias` is the
+    # perturbation strength delta in router-logit units — router KL vs
+    # unperturbed routing is provably <= delta nats; 0 disables (bit-exact).
+    # With `route_bias_adaptive`, delta becomes a ceiling the shared
+    # StepSizeController ramps within from its stall/overfetch thresholds.
+    route_bias: Optional[float] = None
+    route_bias_adaptive: Optional[bool] = None
 
 
 class ServingEngine:
@@ -86,6 +94,10 @@ class ServingEngine:
         assert engine.fused, "serving requires the fused slot-path runtime"
         self.engine = engine
         self.cfg = cfg or EngineServingConfig()
+        if self.cfg.route_bias is not None:
+            engine.set_route_bias(
+                self.cfg.route_bias,
+                adaptive=bool(self.cfg.route_bias_adaptive))
         admission = None
         if self.cfg.admission_cap:
             L = max(len(engine.moe_layer_ids), 1)
@@ -257,9 +269,13 @@ class ServingEngine:
         def now() -> float:
             return time.perf_counter() - self._t0
 
-        def finish(req: Request) -> None:
+        def finish(req: Request, slot: Optional[int] = None) -> None:
+            # `slot` must be passed wherever the batcher has already retired
+            # the request (step() clears req.slot so it can't alias a reused
+            # slot); the prefill-path callers finish BEFORE release, while
+            # req.slot is still live
             req.finish_s = now()
-            eng.retire_slot(state, req.slot)
+            eng.retire_slot(state, req.slot if slot is None else slot)
             report.add_request(request_metrics(req))
 
         while pending or self.batcher.has_work:
@@ -340,8 +356,10 @@ class ServingEngine:
                     self.logits_trace.setdefault(rid, []).append(
                         logits_h[slot])
             next_tokens = {slot: int(sampled[slot]) for slot in active_slots}
+            slot_of = {self.batcher.active[s].request_id: s
+                       for s in active_slots}
             for req in self.batcher.step(next_tokens):
-                finish(req)
+                finish(req, slot_of[req.request_id])
             sm.compute_s = now() - t_step
             sm.n_misses = eng.stats.demand_misses - misses0
             sm.n_hits = eng.stats.prefetch_hits - hits0

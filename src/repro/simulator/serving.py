@@ -29,6 +29,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.core.cache_aware import bias_reroute
 from repro.core.coordinator import Policy, PredictionSource
 from repro.core.metrics import (RunReport, ServingReport, StepMetrics,
                                 request_metrics)
@@ -293,9 +294,33 @@ def simulate_serving(workload: ServingWorkload, spec: SimSpec,
 
         for li in range(L):
             core.land_arrivals(now, sm)
-            merged = np.concatenate(
-                [_token_table(r.step_trace(r.step_idx).assignments[li])
-                 for r in active], axis=0)
+            # §3.4 bounded perturbation, mirroring the live engine: each
+            # request's non-resident assignments may swap to a resident
+            # expert within `route_bias` logits (pre-gate log-probs stand in
+            # for the per-layer router logits the trace doesn't carry).
+            # Adaptive mode (step_cfg.route_bias_max > 0) tracks the shared
+            # controller's ramped strength, exactly as the engine does.
+            rb = policy.route_bias if policy.cache_aware else 0.0
+            if rb > 0.0 and core.controller.cfg.route_bias_max > 0.0:
+                rb = min(core.controller.route_bias, rb)
+            if rb > 0.0:
+                resident_li = {e for (l, e) in core.cache.resident()
+                               if l == li}
+                tables = []
+                for r in active:
+                    st = r.step_trace(r.step_idx)
+                    lg = np.log(source.pregate.probs(
+                        st.hidden_pooled[li][None, :], li) + 1e-12)
+                    tbl, n = bias_reroute(
+                        _token_table(st.assignments[li]), lg, resident_li,
+                        rb)
+                    sm.n_rerouted += n
+                    tables.append(tbl)
+                merged = np.concatenate(tables, axis=0)
+            else:
+                merged = np.concatenate(
+                    [_token_table(r.step_trace(r.step_idx).assignments[li])
+                     for r in active], axis=0)
             now = core.access_layer(li, merged, now, sm)
 
             if policy.prefetch:

@@ -1,0 +1,328 @@
+"""Cache-aware routing in the live path (§3.4): the bounded router-logit
+perturbation, its KL guarantee, the controller feedback that modulates it,
+the simulator mirror, and the scheduler/controller edge-case fixes that
+rode along (expected_active_experts clamp, batcher retirement symmetry,
+guard_hits accounting)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import reduce_config
+from repro.configs.registry import get_config, get_smoke_config
+from repro.core.cache_aware import bias_reroute, residency_logit_bias
+from repro.core.coordinator import ablation
+from repro.core.step_size import (StepSizeConfig, StepSizeController,
+                                  expected_active_experts)
+from repro.models.moe import route
+from repro.runtime.batching import ContinuousBatcher
+from repro.runtime.engine import Engine, SlotBufferEngine
+from repro.runtime.request import Request
+from repro.simulator.events import SimSpec, StepTrace
+from repro.simulator.hardware import HardwareSpec
+from repro.simulator.serving import (ServingConfig, ServingRequest,
+                                     ServingWorkload, simulate_serving)
+
+MS = 1e-3
+
+
+# ---------------------------------------------------------------- the bias
+def test_residency_logit_bias_values_and_shapes():
+    mask = np.array([True, False, True, False])
+    b = residency_logit_bias(mask, 0.75)
+    np.testing.assert_allclose(np.asarray(b), [0.0, -0.75, 0.0, -0.75])
+    # batched (S, E) masks for the pre-gate horizon
+    rows = np.array([[1, 0], [0, 1]])
+    b2 = residency_logit_bias(rows, 2.0)
+    np.testing.assert_allclose(np.asarray(b2), [[0.0, -2.0], [-2.0, 0.0]])
+    # jax input stays on-device / jit-traceable
+    bj = residency_logit_bias(jnp.asarray(mask), 0.5)
+    assert isinstance(bj, jnp.ndarray)
+
+
+def test_router_kl_bounded_by_strength():
+    """KL(p_orig || p_biased) <= delta for ANY logits and residency mask:
+    the one-sided bias in [-delta, 0] shifts log-probabilities by at most
+    delta in each coordinate (the provable quality bound the knob exposes)."""
+    rng = np.random.default_rng(0)
+    for delta in (0.1, 0.5, 1.0, 3.0):
+        for _ in range(20):
+            logits = rng.normal(size=16) * rng.uniform(0.5, 4.0)
+            mask = rng.integers(0, 2, size=16).astype(bool)
+            b = np.asarray(residency_logit_bias(mask, delta))
+            p = np.exp(logits - logits.max())
+            p /= p.sum()
+            lq = (logits + b) - (logits + b).max()
+            lq -= np.log(np.exp(lq).sum())
+            lp = logits - logits.max()
+            lp -= np.log(np.exp(lp).sum())
+            kl = float(np.sum(p * (lp - lq)))
+            assert -1e-9 <= kl <= delta + 1e-6
+
+
+def test_route_swaps_top_k_only_within_strength_window():
+    """A non-resident expert loses its top-k slot only to a resident expert
+    within `strength` logits; a larger gap survives the bias."""
+    d = 4
+    w = np.zeros((d, 3), np.float32)
+    w[0, 0], w[0, 1], w[0, 2] = 2.0, 1.7, 0.0   # logits: [2.0, 1.7, 0.0]
+    x = np.zeros((1, d), np.float32)
+    x[0, 0] = 1.0
+    mask = np.array([False, True, True])          # expert 0 not resident
+    unbiased = route(jnp.asarray(w), jnp.asarray(x), top_k=1)
+    assert int(unbiased.expert_ids[0, 0]) == 0
+    # gap 0.3 < strength 0.5: resident expert 1 takes the slot
+    biased = route(jnp.asarray(w), jnp.asarray(x), top_k=1,
+                   logit_bias=residency_logit_bias(jnp.asarray(mask), 0.5))
+    assert int(biased.expert_ids[0, 0]) == 1
+    # strength 0.2 < gap: the original winner keeps it
+    keep = route(jnp.asarray(w), jnp.asarray(x), top_k=1,
+                 logit_bias=residency_logit_bias(jnp.asarray(mask), 0.2))
+    assert int(keep.expert_ids[0, 0]) == 0
+    # zero bias is numerically exact, not just approximately
+    zero = route(jnp.asarray(w), jnp.asarray(x), top_k=1,
+                 logit_bias=residency_logit_bias(jnp.asarray(mask), 0.0))
+    np.testing.assert_array_equal(np.asarray(zero.logits),
+                                  np.asarray(unbiased.logits))
+
+
+def test_bias_reroute_swaps_within_window_only():
+    logits = np.array([3.0, 2.8, 1.0, 0.0])
+    a = np.array([[0, 2]])                        # token uses experts 0, 2
+    # expert 1 resident, within 0.5 of expert 0 -> 0 swaps to 1; expert 2's
+    # best resident alternative (1) is already in the row and 3 is 1.0 away
+    out, n = bias_reroute(a, logits, resident={1, 3}, strength=0.5)
+    assert n == 1
+    np.testing.assert_array_equal(out, [[1, 2]])
+    # nothing resident / zero strength / all resident: untouched
+    same, n0 = bias_reroute(a, logits, resident=set(), strength=0.5)
+    assert n0 == 0 and np.array_equal(same, a)
+    same, n0 = bias_reroute(a, logits, resident={1}, strength=0.0)
+    assert n0 == 0 and np.array_equal(same, a)
+    same, n0 = bias_reroute(a, logits, resident={0, 1, 2, 3}, strength=9.0)
+    assert n0 == 0 and np.array_equal(same, a)
+
+
+# ------------------------------------------------- controller modulation
+def test_controller_ramps_and_decays_route_bias():
+    c = StepSizeController(cfg=StepSizeConfig(stall_threshold=2,
+                                              overfetch_threshold=2,
+                                              route_bias_max=1.0,
+                                              route_bias_step=0.25), s=3)
+    assert c.route_bias == 0.0
+    c.record_stall(); c.record_stall()            # threshold event
+    assert c.route_bias == pytest.approx(0.25)
+    for _ in range(10):
+        c.record_stall(2)
+    assert c.route_bias == pytest.approx(1.0)     # clamped at the ceiling
+    c.record_overfetch(2)
+    assert c.route_bias == pytest.approx(0.75)    # overfetch decays it
+    snap = c.snapshot()
+    assert snap["route_bias"] == pytest.approx(0.75)
+    # with no ceiling configured the knob never moves (default engines)
+    c2 = StepSizeController(cfg=StepSizeConfig(stall_threshold=1))
+    c2.record_stall()
+    assert c2.route_bias == 0.0
+
+
+def test_guard_hits_counted_and_surfaced():
+    """The capacity guard consumes a stall-driven raise when overfetch
+    pressure is fresh; each consumption is now counted."""
+    c = StepSizeController(cfg=StepSizeConfig(stall_threshold=1,
+                                              overfetch_threshold=100,
+                                              capacity_guard=True), s=3)
+    c.record_overfetch()              # fresh overfetch pressure, no move yet
+    s0 = c.s
+    c.record_stall()                  # threshold event eaten by the guard
+    assert c.s == s0
+    assert c.guard_hits == 1
+    assert c.snapshot()["guard_hits"] == 1
+    c.record_stall()                  # pressure consumed: this one raises
+    assert c.s == s0 + 1
+    assert c.guard_hits == 1
+
+
+def test_set_route_bias_seeds_controller_ceiling():
+    cfg = reduce_config(get_config("olmoe-1b-7b"), layers=2, d_model=32,
+                        heads=2, kv_heads=2, d_ff=64, vocab=128, experts=4,
+                        top_k=2, d_expert=16)
+    eng = Engine(cfg, max_seq=32)
+    sb = SlotBufferEngine(cfg, eng.params, eng.model, n_slots_per_layer=2,
+                          max_seq=32)
+    assert sb.route_bias == 0.0 and not sb.route_bias_adaptive
+    sb.set_route_bias(0.8, adaptive=True)
+    assert sb.controller.cfg.route_bias_max == pytest.approx(0.8)
+    assert sb._route_bias_strength() == 0.0       # controller starts at 0
+    sb.controller.route_bias = 2.0
+    assert sb._route_bias_strength() == pytest.approx(0.8)  # ceiling caps
+    sb.set_route_bias(0.3)                        # fixed mode
+    assert sb._route_bias_strength() == pytest.approx(0.3)
+
+
+# ------------------------------------------------- satellite regressions
+def test_expected_active_experts_clamps_to_expert_count():
+    """threshold at/above the full mass must return E, not E+1 (the
+    searchsorted off-by-one), and tiny thresholds still return >= 1."""
+    probs = np.array([0.5, 0.3, 0.2])
+    assert expected_active_experts(probs, 1.0) == 3
+    assert expected_active_experts(probs, 5.0) == 3     # degenerate input
+    assert expected_active_experts(probs, 0.0) == 1
+    uniform = np.ones(4) / 4
+    assert expected_active_experts(uniform, 1.0) == 4
+
+
+def test_batcher_retire_then_readmit_clears_slot():
+    """Retirement must clear req.slot (mirroring release) so a retired
+    request can never alias the slot its successor now owns."""
+    b = ContinuousBatcher(max_batch=1)
+    a = Request(np.arange(4), max_new_tokens=1)
+    c = Request(np.arange(4), max_new_tokens=2)
+    b.submit(a)
+    b.submit(c)
+    assert b.admit() == [a] and a.slot == 0
+    done = b.step({0: 5})
+    assert done == [a]
+    assert a.slot == -1                     # cleared on retirement
+    assert b.admit() == [c] and c.slot == 0  # slot reused by successor
+    # releasing the RETIRED request is a no-op: it cannot free c's slot
+    b.release(a)
+    assert 0 in b.active and b.active[0] is c
+    assert b.stats.completed == 1
+    b.step({0: 1}); b.step({0: 2})
+    assert b.stats.completed == 2 and not b.has_work
+
+
+# ------------------------------------------------------- simulator mirror
+FAST_HW = HardwareSpec("test", host_bw=1e12, flops=1e15, hbm_bw=1e12,
+                       mem_cap=1e9)
+
+
+def _hot_request(rid, experts_by_layer, n_steps=10, L=2, M=16, d=4):
+    steps = []
+    for si in range(n_steps):
+        assigns = [np.array([[e] for e in experts_by_layer[li]])
+                   for li in range(L)]
+        steps.append(StepTrace(si, np.arange(4), assigns,
+                               np.zeros((L, d), np.float32)))
+    return ServingRequest(prompt_len=16, max_new_tokens=n_steps,
+                          steps=steps, arrival_s=0.0, request_id=rid)
+
+
+def _misses(rep):
+    return sum(sm.n_misses for sm in rep.run.steps)
+
+
+def test_sim_bias_reroute_reduces_misses_and_is_counted():
+    """Disjoint tenants thrash a cache that fits one working set; the
+    trace-level reroute mirror swaps non-resident assignments to resident
+    experts (uniform pre-gate logits -> every swap is within delta) and
+    the miss count drops. route_bias=0 keeps the trace untouched."""
+    ra = [[0, 1, 2, 3], [4, 5, 6, 7]]
+    rb = [[8, 9, 10, 11], [12, 13, 14, 15]]
+    spec = SimSpec(expert_bytes=1e3, layer_time_s=1 * MS, capacity_experts=8)
+    cfg = ServingConfig(max_batch=2, prefill_chunk=16)
+
+    def run(bias):
+        pol = ablation(f"rb{bias:g}", prefetch=False, adaptive_s=False,
+                       two_level_lru=False, cache_aware=True,
+                       blocking_swap_out=False, protect_early_layers=False,
+                       route_bias=bias)
+        wl = ServingWorkload(2, 16, 1, [np.zeros((4, 16), np.float32)] * 2,
+                             [_hot_request(0, ra), _hot_request(1, rb)],
+                             name="rb")
+        return simulate_serving(wl, spec, FAST_HW, pol, cfg=cfg)
+
+    base = run(0.0)
+    biased = run(5.0)
+    assert sum(sm.n_rerouted for sm in base.run.steps) == 0
+    assert sum(sm.n_rerouted for sm in biased.run.steps) > 0
+    assert _misses(biased) < _misses(base)
+
+
+# ------------------------------------------------- slow lane: real engine
+@pytest.fixture(scope="module")
+def ca_setup():
+    cfg = reduce_config(get_config("olmoe-1b-7b"), layers=4, d_model=64,
+                        heads=4, kv_heads=4, d_ff=128, vocab=512, experts=8,
+                        top_k=2, d_expert=32)
+    eng = Engine(cfg, max_seq=64)
+    return cfg, eng
+
+
+def _decode_rows(sb, prompt, n_steps):
+    logits, st = sb.prefill(prompt[None, :])
+    rows = [np.asarray(logits)[0]]
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(n_steps):
+        logits, st = sb.decode_step(tok, st)
+        rows.append(np.asarray(logits)[0])
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    return rows
+
+
+@pytest.mark.slow
+def test_route_bias_zero_strength_bit_exact_gqa(ca_setup):
+    """Strength 0 is bit-exact on the GQA arch even when the CA-gated jit
+    traces are ACTIVE: an adaptive engine whose ceiling is configured but
+    whose controller sits at 0 runs the biased graphs with an all-zero
+    bias, and must reproduce the plain engine's logits exactly."""
+    cfg, eng = ca_setup
+    rng = np.random.default_rng(21)
+    prompt = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    churn = dict(n_slots_per_layer=3, step_size=2, max_seq=64)
+    plain = SlotBufferEngine(cfg, eng.params, eng.model, **churn)
+    want = _decode_rows(plain, prompt, 8)
+    ca = SlotBufferEngine(cfg, eng.params, eng.model, **churn)
+    # ceiling > 0 selects the CA traces; route_bias_max stays 0 in the
+    # controller cfg so stalls cannot ramp the strength off 0 mid-test
+    ca.route_bias = 1.0
+    ca.route_bias_adaptive = True
+    assert ca.controller.cfg.route_bias_max == 0.0
+    got = _decode_rows(ca, prompt, 8)
+    assert ca.stats.demand_misses > 0             # the slot path churned
+    for k, (a, b) in enumerate(zip(got, want)):
+        np.testing.assert_array_equal(a, b,
+                                      err_msg=f"diverged at step {k}")
+    # and the explicitly-configured strength-0 engine is exact too
+    z = SlotBufferEngine(cfg, eng.params, eng.model, route_bias=0.0, **churn)
+    for k, (a, b) in enumerate(zip(_decode_rows(z, prompt, 8), want)):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.slow
+def test_route_bias_zero_strength_bit_exact_mla():
+    """Same strength-0 contract on the MLA + shared-experts arch
+    (deepseek-v2-lite smoke): the CA traces must thread the bias through
+    the vector-cache_len decode path without perturbing anything."""
+    cfg = get_smoke_config("deepseek-v2-lite")
+    eng = Engine(cfg, max_seq=48)
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    kw = dict(n_slots_per_layer=cfg.moe.num_experts // 2, step_size=1,
+              max_seq=48)
+    plain = SlotBufferEngine(cfg, eng.params, eng.model, **kw)
+    want = _decode_rows(plain, prompt, 5)
+    ca = SlotBufferEngine(cfg, eng.params, eng.model, **kw)
+    ca.route_bias = 1.0
+    ca.route_bias_adaptive = True
+    got = _decode_rows(ca, prompt, 5)
+    for k, (a, b) in enumerate(zip(got, want)):
+        np.testing.assert_array_equal(a, b,
+                                      err_msg=f"MLA diverged at step {k}")
+
+
+@pytest.mark.slow
+def test_route_bias_reduces_demand_misses_single_stream(ca_setup):
+    """The point of the perturbation: under eviction churn, biased decode
+    demands fewer non-resident experts than unbiased decode of the same
+    prompt (deterministic single-stream comparison)."""
+    cfg, eng = ca_setup
+    rng = np.random.default_rng(33)
+    prompt = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    churn = dict(n_slots_per_layer=3, step_size=2, max_seq=64)
+    plain = SlotBufferEngine(cfg, eng.params, eng.model, **churn)
+    _decode_rows(plain, prompt, 10)
+    biased = SlotBufferEngine(cfg, eng.params, eng.model, route_bias=1.0,
+                              **churn)
+    _decode_rows(biased, prompt, 10)
+    assert biased.stats.demand_misses < plain.stats.demand_misses
+    assert biased.stats.swap_experts < plain.stats.swap_experts
