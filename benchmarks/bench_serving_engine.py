@@ -37,8 +37,9 @@ from repro.runtime.serving import (EngineServingConfig,         # noqa: E402
 DEFAULT = dict(layers=4, d_model=64, heads=4, kv_heads=4, d_ff=128,
                vocab=512, experts=8, top_k=2, d_expert=32,
                n_slots_per_layer=6, requests=8, prompt=16, max_new=16,
-               repeats=3)
-SMOKE = dict(DEFAULT, requests=6, max_new=10, repeats=2)
+               repeats=3, sweep_batches=(4, 8, 16, 32))
+SMOKE = dict(DEFAULT, requests=6, max_new=10, repeats=2,
+             sweep_batches=(4, 8))
 
 
 def _bench_config(p):
@@ -60,10 +61,11 @@ def _max_seq(p):
     return p["prompt"] + p["max_new"] + 8
 
 
-def _slot_engine(cfg, eng, p):
+def _slot_engine(cfg, eng, p, use_superkernel=False):
     return SlotBufferEngine(cfg, eng.params, eng.model,
                             n_slots_per_layer=p["n_slots_per_layer"],
-                            max_seq=_max_seq(p))
+                            max_seq=_max_seq(p),
+                            use_superkernel=use_superkernel)
 
 
 def _total_tokens(reqs):
@@ -88,17 +90,27 @@ def bench_sequential(cfg, eng, p):
     return {"tok_s": best}
 
 
-def bench_serving(cfg, eng, p, max_batch):
+def bench_serving(cfg, eng, p, max_batch, use_superkernel=False):
     """Continuous batching through ServingEngine at `max_batch` slots.
 
     Pinned to the monolithic prefill path (`prefill_chunk=0`): this bench's
     committed baseline measures batched-vs-sequential DECODE and predates
     chunked prefill; the chunked-vs-monolithic comparison lives in
-    bench_prefill.py."""
-    sb = _slot_engine(cfg, eng, p)
+    bench_prefill.py.
+
+    `jit_calls_per_step`: warm jitted dispatches per decode step through the
+    engine's Dispatcher funnel (prefill dispatches ride along in the
+    numerator — identical for both paths, so the unfused-vs-superkernel
+    comparison is apples-to-apples)."""
+    sb = _slot_engine(cfg, eng, p, use_superkernel=use_superkernel)
     scfg = EngineServingConfig(max_batch=max_batch, prefill_chunk=0)
-    ServingEngine(sb, scfg).serve(_requests(p, seed=1))     # warmup/jit
+    # two warmup serves: the superkernel jits one segment fn per horizon
+    # value the verify/replay dynamics actually visit, so one request mix
+    # rarely covers every (s, first, logits) key
+    ServingEngine(sb, scfg).serve(_requests(p, seed=1))
+    ServingEngine(sb, scfg).serve(_requests(p, seed=2))
     best = None
+    sb.stats.reset()
     for rep in range(p["repeats"]):
         reqs = _requests(p, seed=2 + rep)
         report = ServingEngine(sb, scfg).serve(reqs)
@@ -108,7 +120,22 @@ def bench_serving(cfg, eng, p, max_batch):
                     "ttft_p50_s": report.ttft["p50"],
                     "tpot_p50_s": report.tpot["p50"],
                     "mean_occupancy": report.mean_occupancy}
+    best["jit_calls_per_step"] = sb.stats.jit_calls / max(sb.stats.steps, 1)
     return best
+
+
+def bench_batch_sweep(cfg, eng, p):
+    """tokens/s + dispatches/step at batch 4/8/16/32, unfused vs the decode
+    superkernel, with enough queued requests to keep each batch full."""
+    sweep = {}
+    for b in p["sweep_batches"]:
+        pb = dict(p, requests=max(p["requests"], 2 * b), repeats=1)
+        sweep[f"b{b}"] = {
+            "unfused": bench_serving(cfg, eng, pb, max_batch=b),
+            "superkernel": bench_serving(cfg, eng, pb, max_batch=b,
+                                         use_superkernel=True),
+        }
+    return sweep
 
 
 def verify_parity(cfg, eng, p):
@@ -132,13 +159,18 @@ def run_bench(p, out_path="BENCH_serving_engine.json", smoke=False,
     seq = bench_sequential(cfg, eng, p)
     b1 = bench_serving(cfg, eng, p, max_batch=1)
     b4 = bench_serving(cfg, eng, p, max_batch=4)
+    sweep = bench_batch_sweep(cfg, eng, p)
     result = {
         "config": {k: v for k, v in p.items()},
         "sequential_tok_s": seq["tok_s"],
         "serve_batch1": b1,
         "serve_batch4": b4,
+        "batch_sweep": sweep,
         "speedup_b4_vs_sequential": b4["tok_s"] / seq["tok_s"],
         "speedup_b4_vs_b1": b4["tok_s"] / b1["tok_s"],
+        "superkernel_dispatch_reduction_b4":
+            sweep["b4"]["unfused"]["jit_calls_per_step"]
+            / max(sweep["b4"]["superkernel"]["jit_calls_per_step"], 1e-9),
         "batched_matches_single_request_greedy": parity,
     }
     with open(out_path, "w") as f:
@@ -153,12 +185,27 @@ def run_bench(p, out_path="BENCH_serving_engine.json", smoke=False,
           f"{result['speedup_b4_vs_sequential']:.2f}x "
           f"(ttft_p50 {b4['ttft_p50_s']*1e3:.1f}ms, "
           f"tpot_p50 {b4['tpot_p50_s']*1e3:.2f}ms)")
+    for name, row in sweep.items():
+        line = (f"serving_engine/sweep/{name}: "
+                f"unfused {row['unfused']['tok_s']:.1f}tok/s "
+                f"@{row['unfused']['jit_calls_per_step']:.1f}jit | "
+                f"superkernel {row['superkernel']['tok_s']:.1f}tok/s "
+                f"@{row['superkernel']['jit_calls_per_step']:.1f}jit")
+        print(line)
+        if csv is not None:
+            csv.add(f"serving_engine/sweep/{name}", 0.0, line.split(": ")[1])
     if smoke:
         assert parity, "batched serving diverged from single-request generate"
         assert result["speedup_b4_vs_sequential"] > 1.0, (
             "batch-4 continuous serving must beat sequential generate on "
             f"aggregate tokens/s, got {result['speedup_b4_vs_sequential']:.2f}x")
-        print("SMOKE OK: batched serving beats sequential aggregate tokens/s")
+        assert result["superkernel_dispatch_reduction_b4"] > 1.3, (
+            "decode superkernel must cut dispatches/step in batched "
+            "serving, got "
+            f"{result['superkernel_dispatch_reduction_b4']:.2f}x")
+        print("SMOKE OK: batched serving beats sequential aggregate "
+              "tokens/s; superkernel cuts dispatches "
+              f"{result['superkernel_dispatch_reduction_b4']:.2f}x")
     return result
 
 

@@ -1,0 +1,352 @@
+"""Pallas TPU decode superkernels: the per-layer decode hot path in one launch.
+
+Two kernels, both shaped for batched single-token decode where dispatch
+overhead (not FLOPs) dominates the reduced bench configs:
+
+- `fused_moe_entry`: router logits (+ optional residency logit bias), softmax,
+  iterative top-k, slot-table lookup with the dead-sentinel miss rule, and the
+  per-expert gate/up/down FFN with gate-weighted fp32 accumulation — the whole
+  route -> dispatch -> `slot_ffn` sequence of `models.moe.moe_slotbuf` in ONE
+  `pallas_call`. The (layer, expert) -> slot table rides as a scalar-prefetch
+  operand (stacked clamped/raw rows) so the BlockSpec index maps stream each
+  expert's weights straight from its slot, and the raw row zeroes gates of
+  non-resident experts (the sentinel rule) inside the kernel.
+
+- `fused_decode_attention` / `fused_mla_decode_attention`: one-token attention
+  that inserts the new K/V (or MLA latent/pe) row into the ring at
+  `cache_len % size` and runs chunked online-softmax over only the chunks the
+  per-row `cache_len` reaches — replacing the separate cache-scatter +
+  masked full-window softmax of `models.attention.decode_attention` /
+  `mla_decode` with a single launch per layer.
+
+Both run interpret-mode on CPU (the `kernels/ops.py::_default_interpret`
+pattern) and compile to Mosaic on TPU; `kernels/ref.py` and the einsum paths
+stay the numerics oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU-specific grid spec (works in interpret mode on CPU too)
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+from repro.kernels.slot_gather import _fit_block
+
+NEG = -1e30                 # top-k masking (matches kernels/topk_gating.py)
+NEG_INF = -2.0 ** 30        # attention masking (matches models/attention.py)
+
+
+# ---------------------------------------------------------------------------
+# Fused MoE entry: route + top-k + slot lookup + expert FFN, one launch
+# ---------------------------------------------------------------------------
+
+def _fused_moe_kernel(slot_ref, x_ref, rw_ref, bias_ref, wg_ref, wu_ref,
+                      wd_ref, y_ref, gates_ref, ids_ref, *, k: int,
+                      norm: bool):
+    """Grid step e computes expert e's gate-weighted contribution for every
+    token; the router/top-k recompute per step is negligible next to the
+    launch it saves (T is a decode batch, E <= 256)."""
+    e = pl.program_id(0)
+    x = x_ref[...]                                    # (T, d)
+    xf = x.astype(jnp.float32)
+    logits = jnp.dot(xf, rw_ref[...].astype(jnp.float32)) \
+        + bias_ref[0].astype(jnp.float32)
+    T, E = logits.shape
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    probs = p / jnp.sum(p, axis=-1, keepdims=True)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (T, E), 1)
+    total = jnp.zeros((T, 1), jnp.float32)
+    work = probs
+    vals, idxs = [], []
+    for _ in range(k):                 # same first-max rule as _topk_kernel
+        v = jnp.max(work, axis=-1, keepdims=True)
+        idx = jnp.min(jnp.where(work == v, iota, E), axis=-1, keepdims=True)
+        work = jnp.where(iota == idx, NEG, work)
+        vals.append(v)
+        idxs.append(idx)
+        total = total + v
+    gates = jnp.concatenate(vals, axis=-1)            # (T, k)
+    if norm:
+        gates = gates / jnp.maximum(total, 1e-9)
+    ids = jnp.concatenate(idxs, axis=-1).astype(jnp.int32)
+    # dead-sentinel rule: a non-resident expert (raw slot < 0) contributes
+    # nothing — its assignments' gates zero exactly as in moe_slotbuf. The
+    # one-hot contraction avoids a gather from the scalar ref.
+    res = (slot_ref[1] >= 0).astype(jnp.float32)                  # (E,)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (T, k, E), 2)
+    resk = jnp.sum(jnp.where(iota_k == ids[:, :, None],
+                             res[None, None, :], 0.0), axis=-1)
+    gates = gates * resk
+
+    @pl.when(e == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+        gates_ref[...] = gates
+        ids_ref[...] = ids
+
+    ge = jnp.sum(jnp.where(ids == e, gates, 0.0), axis=-1)        # (T,)
+    g = jnp.dot(x, wg_ref[0])                         # bf16, like the einsum
+    u = jnp.dot(x, wu_ref[0])
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    part = jnp.dot(h, wd_ref[0])
+    y_ref[...] += ge[:, None] * part.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "norm_topk",
+                                             "interpret"))
+def fused_moe_entry(x: jnp.ndarray, router_w: jnp.ndarray,
+                    logit_bias: jnp.ndarray, slot_of_expert: jnp.ndarray,
+                    s_gate: jnp.ndarray, s_up: jnp.ndarray,
+                    s_down: jnp.ndarray, *, top_k: int,
+                    norm_topk: bool = True, interpret: bool = False):
+    """x: (T, d) tokens; router_w: (d, E); logit_bias: (E,) additive fp32
+    (zeros when cache-aware routing is off — bit-exact); slot_of_expert:
+    (E,) int32, -1 = non-resident; slot buffers (S, d, f)/(S, f, d).
+
+    Returns (y (T, d) float32, gates (T, top_k) float32, ids (T, top_k)
+    int32) — gates already zeroed for non-resident assignments, so the
+    caller's needed-mask derives from ids alone.
+    """
+    T, d = x.shape
+    E = router_w.shape[1]
+    f = s_gate.shape[-1]
+    raw = slot_of_expert.astype(jnp.int32)
+    # stacked scalar-prefetch rows: [0] clamped (valid BlockSpec index even
+    # for misses — their output is gate-zeroed), [1] raw (sentinel rule)
+    slots2 = jnp.stack([jnp.maximum(raw, 0), raw])
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(E,),
+        in_specs=[
+            pl.BlockSpec((T, d), lambda e, s: (0, 0)),
+            pl.BlockSpec((d, E), lambda e, s: (0, 0)),
+            pl.BlockSpec((1, E), lambda e, s: (0, 0)),
+            pl.BlockSpec((1, d, f), lambda e, s: (s[0, e], 0, 0)),
+            pl.BlockSpec((1, d, f), lambda e, s: (s[0, e], 0, 0)),
+            pl.BlockSpec((1, f, d), lambda e, s: (s[0, e], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((T, d), lambda e, s: (0, 0)),
+            pl.BlockSpec((T, top_k), lambda e, s: (0, 0)),
+            pl.BlockSpec((T, top_k), lambda e, s: (0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_moe_kernel, k=top_k, norm=norm_topk),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((T, d), jnp.float32),
+                   jax.ShapeDtypeStruct((T, top_k), jnp.float32),
+                   jax.ShapeDtypeStruct((T, top_k), jnp.int32)],
+        interpret=interpret,
+    )(slots2, x, router_w, logit_bias.reshape(1, E), s_gate, s_up, s_down)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-token attention: ring insert + online softmax, one launch
+# ---------------------------------------------------------------------------
+
+def _online_softmax(scores_fn, values_fn, valid, n_chunks: int,
+                    block_s: int, acc_shape, m_shape):
+    """Chunked online softmax driven by a traced `valid` length: chunks the
+    per-row cache_len never reaches are skipped via lax.cond, so compute
+    tracks the filled prefix, not the ring capacity."""
+    def body(c, carry):
+        acc, m, l = carry
+        start = c * block_s
+
+        def compute(carry):
+            acc, m, l = carry
+            s_blk, kpos = scores_fn(start)
+            s_blk = jnp.where(kpos < valid, s_blk, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s_blk, axis=-1))
+            p = jnp.exp(s_blk - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + values_fn(p, start)
+            return acc_new, m_new, l_new
+
+        return jax.lax.cond(start < valid, compute, lambda cr: cr, carry)
+
+    acc0 = jnp.zeros(acc_shape, jnp.float32)
+    m0 = jnp.full(m_shape, NEG_INF, jnp.float32)
+    l0 = jnp.zeros(m_shape, jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_chunks, body, (acc0, m0, l0))
+    return acc / jnp.maximum(l[..., None], 1e-20)
+
+
+def _gqa_decode_kernel(clen_ref, q_ref, kn_ref, vn_ref, kc_ref, vc_ref,
+                       o_ref, ko_ref, vo_ref, *, scale: float,
+                       logit_softcap: float, block_s: int):
+    b = pl.program_id(0)
+    clen = clen_ref[b]
+    kc = kc_ref[0]                                    # (S, Hkv, D)
+    vc = vc_ref[0]
+    S, Hkv, D = kc.shape
+    # ring insert: slot(pos) = pos % size (layer_decode's discipline; for
+    # unwrapped caches clen < S makes this a plain positional insert)
+    ins = jax.lax.broadcasted_iota(jnp.int32, (S, 1, 1), 0) \
+        == jax.lax.rem(clen, S)
+    kc = jnp.where(ins, kn_ref[0], kc)
+    vc = jnp.where(ins, vn_ref[0], vc)
+    ko_ref[0] = kc
+    vo_ref[0] = vc
+    valid = jnp.minimum(clen + 1, S)
+
+    q = q_ref[0, 0]                                   # (Hq, D)
+    G = q.shape[0] // Hkv
+    qf = q.reshape(Hkv, G, D).astype(jnp.float32) * scale
+    kcf = kc.astype(jnp.float32)
+    vcf = vc.astype(jnp.float32)
+
+    def scores(start):
+        kb = jax.lax.dynamic_slice_in_dim(kcf, start, block_s, axis=0)
+        s_blk = jnp.einsum("hgd,khd->hgk", qf, kb)
+        if logit_softcap > 0.0:
+            s_blk = logit_softcap * jnp.tanh(s_blk / logit_softcap)
+        kpos = start + jax.lax.broadcasted_iota(jnp.int32, (1, 1, block_s), 2)
+        return s_blk, kpos
+
+    def values(p, start):
+        vb = jax.lax.dynamic_slice_in_dim(vcf, start, block_s, axis=0)
+        return jnp.einsum("hgk,khd->hgd", p, vb)
+
+    out = _online_softmax(scores, values, valid, S // block_s, block_s,
+                          (Hkv, G, D), (Hkv, G))
+    o_ref[0, 0] = out.reshape(Hkv * G, D).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("logit_softcap", "scale",
+                                             "block_s", "interpret"))
+def fused_decode_attention(q: jnp.ndarray, k_new: jnp.ndarray,
+                           v_new: jnp.ndarray, k_cache: jnp.ndarray,
+                           v_cache: jnp.ndarray, cache_len: jnp.ndarray, *,
+                           logit_softcap: float = 0.0, scale=None,
+                           block_s: int = 128, interpret: bool = False):
+    """q: (B, 1, Hq, D); k_new/v_new: (B, 1, Hkv, D); caches: (B, S, Hkv, D)
+    ring buffers; cache_len: (B,) int32 = entries cached BEFORE this token
+    (the kernel inserts at `cache_len % S` and attends over
+    `min(cache_len + 1, S)`). Returns (out (B, 1, Hq, D), k_cache', v_cache').
+    """
+    B, _, Hq, D = q.shape
+    S = k_cache.shape[1]
+    Hkv = k_cache.shape[2]
+    if scale is None:
+        scale = D ** -0.5
+    block_s = _fit_block(S, block_s)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, 1, Hq, D), lambda b, s: (b, 0, 0, 0)),
+            pl.BlockSpec((1, 1, Hkv, D), lambda b, s: (b, 0, 0, 0)),
+            pl.BlockSpec((1, 1, Hkv, D), lambda b, s: (b, 0, 0, 0)),
+            pl.BlockSpec((1, S, Hkv, D), lambda b, s: (b, 0, 0, 0)),
+            pl.BlockSpec((1, S, Hkv, D), lambda b, s: (b, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Hq, D), lambda b, s: (b, 0, 0, 0)),
+            pl.BlockSpec((1, S, Hkv, D), lambda b, s: (b, 0, 0, 0)),
+            pl.BlockSpec((1, S, Hkv, D), lambda b, s: (b, 0, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_gqa_decode_kernel, scale=float(scale),
+                          logit_softcap=float(logit_softcap),
+                          block_s=block_s),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, 1, Hq, D), q.dtype),
+                   jax.ShapeDtypeStruct(k_cache.shape, k_cache.dtype),
+                   jax.ShapeDtypeStruct(v_cache.shape, v_cache.dtype)],
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), q, k_new, v_new, k_cache, v_cache)
+
+
+def _mla_decode_kernel(clen_ref, qa_ref, qp_ref, cn_ref, pn_ref, lat_ref,
+                       pe_ref, ctx_ref, lat_o_ref, pe_o_ref, *, scale: float,
+                       block_s: int):
+    b = pl.program_id(0)
+    clen = clen_ref[b]
+    lat = lat_ref[0]                                  # (S, R)
+    pe = pe_ref[0]                                    # (S, P)
+    S = lat.shape[0]
+    # MLA latent cache is positional (no ring): insert at clen
+    ins = jax.lax.broadcasted_iota(jnp.int32, (S, 1), 0) == clen
+    lat = jnp.where(ins, cn_ref[0], lat)
+    pe = jnp.where(ins, pn_ref[0], pe)
+    lat_o_ref[0] = lat
+    pe_o_ref[0] = pe
+    valid = clen + 1
+
+    qa = qa_ref[0].astype(jnp.float32)                # (H, R)
+    qp = qp_ref[0].astype(jnp.float32)                # (H, P)
+    latf = lat.astype(jnp.float32)
+    pef = pe.astype(jnp.float32)
+    H, R = qa.shape
+
+    def scores(start):
+        lb = jax.lax.dynamic_slice_in_dim(latf, start, block_s, axis=0)
+        pb = jax.lax.dynamic_slice_in_dim(pef, start, block_s, axis=0)
+        s_blk = (jnp.einsum("hr,kr->hk", qa, lb)
+                 + jnp.einsum("hp,kp->hk", qp, pb)) * scale
+        kpos = start + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+        return s_blk, kpos
+
+    def values(p, start):
+        lb = jax.lax.dynamic_slice_in_dim(latf, start, block_s, axis=0)
+        return jnp.einsum("hk,kr->hr", p, lb)
+
+    ctx_ref[0] = _online_softmax(scores, values, valid, S // block_s,
+                                 block_s, (H, R), (H,))
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_s", "interpret"))
+def fused_mla_decode_attention(q_abs: jnp.ndarray, q_pe: jnp.ndarray,
+                               c_new: jnp.ndarray, pe_new: jnp.ndarray,
+                               latent: jnp.ndarray, pe: jnp.ndarray,
+                               cache_len: jnp.ndarray, *, scale: float,
+                               block_s: int = 128, interpret: bool = False):
+    """Weight-absorbed MLA decode attention over the compressed cache.
+
+    q_abs: (B, H, R) fp32 (q_nope already absorbed through wkv_b's key half);
+    q_pe: (B, H, P); c_new: (B, R); pe_new: (B, P); latent: (B, S, R);
+    pe: (B, S, P); cache_len: (B,) int32 (insert at cache_len, positional).
+    Returns (ctx (B, H, R) float32, latent', pe') — the o-side absorb
+    (ctx @ wv @ wo) stays outside, it is batch-size work only.
+    """
+    B, H, R = q_abs.shape
+    P = q_pe.shape[-1]
+    S = latent.shape[1]
+    block_s = _fit_block(S, block_s)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, H, R), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, H, P), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, R), lambda b, s: (b, 0)),
+            pl.BlockSpec((1, P), lambda b, s: (b, 0)),
+            pl.BlockSpec((1, S, R), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, S, P), lambda b, s: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, R), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, S, R), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, S, P), lambda b, s: (b, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_mla_decode_kernel, scale=float(scale),
+                          block_s=block_s),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, H, R), jnp.float32),
+                   jax.ShapeDtypeStruct(latent.shape, latent.dtype),
+                   jax.ShapeDtypeStruct(pe.shape, pe.dtype)],
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), q_abs, q_pe, c_new, pe_new, latent, pe)

@@ -49,7 +49,7 @@ from repro.models.transformer import (LayerSpec, Model, init_layer_cache,
                                       layer_decode, layer_forward,
                                       layer_prefill, layer_prefill_chunk,
                                       split_ffn_params)
-from repro.runtime.instrument import Stopwatch
+from repro.runtime.instrument import Dispatcher, Stopwatch
 from repro.runtime.sampler import sample
 from repro.simulator.events import RoutingTrace, StepTrace
 
@@ -392,7 +392,8 @@ class SlotBufferEngine:
                  step_size: Optional[int] = None,
                  controller: Optional[StepSizeController] = None,
                  pregate_margin: int = 2, route_bias: float = 0.0,
-                 route_bias_adaptive: bool = False):
+                 route_bias_adaptive: bool = False,
+                 use_superkernel: bool = False):
         assert cfg.moe is not None
         self.cfg = cfg
         self.model = model
@@ -409,8 +410,19 @@ class SlotBufferEngine:
         self.would_stall = 0
         self.fused = fused
         self.use_kernel = use_kernel
+        # decode superkernel: batched decode restructured into per-MoE-layer
+        # SEGMENTS (preceding dense layers + the MoE layer), each ONE jitted
+        # dispatch built on the fused Pallas kernels (attention insert +
+        # online softmax; route + top-k + slot FFN). Uniform speculation:
+        # every segment dispatches against current residency and is verified
+        # afterwards from the pulled masks (replay on mispredict).
+        self.use_superkernel = use_superkernel
+        self._sk_segs = None
         self.prefetch_enabled = prefetch and fused
         self.stats = SlotPathStats()
+        # every warm jitted dispatch funnels through this counter so
+        # jit_calls accounting cannot drift from the calls actually made
+        self._dispatch = Dispatcher(self.stats)
         # per-absolute-layer params, sliced from the stacked tree ONCE
         self._p = [_layer_params(model, params, i)
                    for i in range(len(self.specs))]
@@ -794,16 +806,17 @@ class SlotBufferEngine:
         (None keeps the exact pre-bias traces)."""
         if s == 0:
             return needed_dev[None]
-        self.stats.jit_calls += 1
         if rbias is not None:
-            return self._pregate_fn(s, batched=active_dev is not None)(
+            return self._dispatch(
+                self._pregate_fn(s, batched=active_dev is not None),
                 flat, needed_dev, self._router_slice(li, s), active_dev,
                 rbias)
         if active_dev is not None:
-            return self._pregate_fn(s, batched=True)(
-                flat, needed_dev, self._router_slice(li, s), active_dev)
-        return self._pregate_fn(s)(flat, needed_dev,
-                                   self._router_slice(li, s))
+            return self._dispatch(self._pregate_fn(s, batched=True),
+                                  flat, needed_dev,
+                                  self._router_slice(li, s), active_dev)
+        return self._dispatch(self._pregate_fn(s), flat, needed_dev,
+                              self._router_slice(li, s))
 
     @staticmethod
     def _decode_sync_rows(li: int, s: int, rows: np.ndarray):
@@ -981,20 +994,20 @@ class SlotBufferEngine:
             return self._forward_legacy(tokens)
         self.stats.steps += 1
         tokens = jnp.asarray(tokens, jnp.int32)
-        x, positions = self._embed_fn()(self.params, tokens)
-        self.stats.jit_calls += 1
+        x, positions = self._dispatch(self._embed_fn(), self.params,
+                                      tokens)
         li = 0
         for i, spec in enumerate(self.specs):
             p = self._p[i]
             if not spec.is_moe:
-                x = self._dense_fn(spec)(p, x, positions)
-                self.stats.jit_calls += 1
+                x = self._dispatch(self._dense_fn(spec), p, x,
+                                   positions)
                 continue
             nxt = self._next_router(li + 1)
             want_pred = self.prefetch_enabled and nxt is not None
-            x, flat, r, masks = self._pre_fn(spec, want_pred)(
-                p, x, positions, nxt if want_pred else None)
-            self.stats.jit_calls += 1
+            x, flat, r, masks = self._dispatch(
+                self._pre_fn(spec, want_pred), p, x, positions,
+                nxt if want_pred else None)
             # ONE small host pull: (2, E) needed/predicted bool masks
             masks_h = np.asarray(masks)
             self.stats.host_syncs += 1
@@ -1015,8 +1028,8 @@ class SlotBufferEngine:
                 # issue next-layer swap-ins BEFORE this layer's FFN dispatch
                 self.prefetch_layer(li + 1, predicted)
             slot_map = jnp.asarray(self.table.layer_slot_map(li))
-            x = self._ffn_fn(spec)(p, self.buffer, slot_map, x, flat, r)
-            self.stats.jit_calls += 1
+            x = self._dispatch(self._ffn_fn(spec), p, self.buffer,
+                               slot_map, x, flat, r)
             li += 1
         # next step's sweep restarts at layer 0: shield the first layer's
         # residents from the step-boundary prefetches (paper §3.3.1)
@@ -1125,29 +1138,27 @@ class SlotBufferEngine:
         B, T = tokens.shape
         assert T <= self.max_seq, f"prompt {T} exceeds max_seq {self.max_seq}"
         self.stats.steps += 1
-        x, positions = self._embed_fn()(self.params, tokens)
-        self.stats.jit_calls += 1
+        x, positions = self._dispatch(self._embed_fn(), self.params,
+                                      tokens)
         caches: List[Any] = []
         li = 0
         for i, spec in enumerate(self.specs):
             p = self._p[i]
             if not spec.is_moe:
-                x, c = self._dense_prefill_fn(spec)(p, x, positions)
-                self.stats.jit_calls += 1
+                x, c = self._dispatch(self._dense_prefill_fn(spec), p,
+                                      x, positions)
                 caches.append(c)
                 continue
-            x, flat, r, needed_dev, c = self._pre_prefill_fn(spec)(
-                p, x, positions)
+            x, flat, r, needed_dev, c = self._dispatch(
+                self._pre_prefill_fn(spec), p, x, positions)
             caches.append(c)
-            self.stats.jit_calls += 1
             slot_map = self._prefill_moe_sync(li, flat, needed_dev)
-            x = self._ffn_fn(spec)(p, self.buffer, slot_map, x, flat, r)
-            self.stats.jit_calls += 1
+            x = self._dispatch(self._ffn_fn(spec), p, self.buffer,
+                               slot_map, x, flat, r)
             li += 1
         self.cache.protect_early_layers(
             max(1, min(self._s_eff(), len(self.moe_layer_ids))))
-        logits = self._logits_fn()(self.params, x)
-        self.stats.jit_calls += 1
+        logits = self._dispatch(self._logits_fn(), self.params, x)
         return logits, DecodeState(caches, jnp.asarray(T, jnp.int32),
                            pos=int(T))
 
@@ -1208,31 +1219,29 @@ class SlotBufferEngine:
         buf = np.zeros((1, C), np.int32)
         buf[0, :t] = cursor.tokens[o:o + t]
         self.stats.steps += 1
-        x, positions, valid = self._embed_chunk_fn()(
-            self.params, jnp.asarray(buf), o, t)
-        self.stats.jit_calls += 1
+        x, positions, valid = self._dispatch(
+            self._embed_chunk_fn(), self.params, jnp.asarray(buf), o, t)
         li = 0
         for i, spec in enumerate(self.specs):
             p = self._p[i]
             if not spec.is_moe:
-                x, cursor.caches[i] = self._dense_prefill_chunk_fn(
-                    spec, bucket)(p, x, positions, cursor.caches[i], o, t)
-                self.stats.jit_calls += 1
+                x, cursor.caches[i] = self._dispatch(
+                    self._dense_prefill_chunk_fn(spec, bucket), p, x,
+                    positions, cursor.caches[i], o, t)
                 continue
-            x, flat, r, needed_dev, cursor.caches[i] = \
-                self._pre_prefill_chunk_fn(spec, bucket)(
-                    p, x, positions, cursor.caches[i], o, t)
-            self.stats.jit_calls += 1
+            x, flat, r, needed_dev, cursor.caches[i] = self._dispatch(
+                self._pre_prefill_chunk_fn(spec, bucket), p, x, positions,
+                cursor.caches[i], o, t)
             slot_map = self._prefill_moe_sync(li, flat, needed_dev, valid)
-            x = self._ffn_fn(spec)(p, self.buffer, slot_map, x, flat, r)
-            self.stats.jit_calls += 1
+            x = self._dispatch(self._ffn_fn(spec), p, self.buffer,
+                               slot_map, x, flat, r)
             li += 1
         self.cache.protect_early_layers(
             max(1, min(self._s_eff(), len(self.moe_layer_ids))))
         cursor.offset = o + t
         if cursor.done:
-            cursor.logits = self._logits_at_fn()(self.params, x, t - 1)
-            self.stats.jit_calls += 1
+            cursor.logits = self._dispatch(self._logits_at_fn(),
+                                           self.params, x, t - 1)
         return cursor.done
 
     def _run_prefill_cursor(self, tokens, chunk_size: int) -> PrefillCursor:
@@ -1358,6 +1367,8 @@ class SlotBufferEngine:
         neighbours and residency is guaranteed (or replayed) before each
         FFN dispatch."""
         assert self.fused, "incremental decode requires the fused runtime"
+        if self.use_superkernel:
+            return self._decode_step_superkernel(tok, state)
         # cache-aware routing is gated on the CEILING, not the live strength:
         # an adaptive engine at strength 0 keeps using the biased traces
         # (with a zero bias) so ramping costs no recompiles mid-serve
@@ -1382,8 +1393,8 @@ class SlotBufferEngine:
         # fresh state: the input DecodeState stays valid (branching several
         # continuations off one saved state must not share cache writes)
         caches, clen = list(state.caches), state.cache_len
-        x = self._embed_decode_fn()(self.params, tok, clen)
-        self.stats.jit_calls += 1
+        x = self._dispatch(self._embed_decode_fn(), self.params, tok,
+                           clen)
 
         predicted: Dict[int, set] = {}   # li -> predicted expert set
         # pending: (li, abs_i, needed_dev, slot_snap, ready_snap) per
@@ -1464,25 +1475,25 @@ class SlotBufferEngine:
             if not spec.is_moe:
                 if pending:
                     ckpt[i] = (x, caches[i])
-                x, caches[i] = self._dense_decode_fn(spec)(p, x, caches[i],
-                                                           clen)
-                self.stats.jit_calls += 1
+                x, caches[i] = self._dispatch(
+                    self._dense_decode_fn(spec), p, x, caches[i], clen)
                 i += 1
                 continue
             x_in, old_c = x, caches[i]
             if ca:
                 # cache-aware routing: this layer's residency bias rides the
                 # pre dispatch (host mask push only — no extra syncs)
-                x2, flat, r, needed_dev, c2 = self._pre_decode_fn(
-                    spec, batched=batched)(p, x_in, old_c, clen, active_dev,
-                                           self._residency_bias(li))
+                x2, flat, r, needed_dev, c2 = self._dispatch(
+                    self._pre_decode_fn(spec, batched=batched),
+                    p, x_in, old_c, clen, active_dev,
+                    self._residency_bias(li))
             elif batched:
-                x2, flat, r, needed_dev, c2 = self._pre_decode_fn(
-                    spec, batched=True)(p, x_in, old_c, clen, active_dev)
+                x2, flat, r, needed_dev, c2 = self._dispatch(
+                    self._pre_decode_fn(spec, batched=True),
+                    p, x_in, old_c, clen, active_dev)
             else:
-                x2, flat, r, needed_dev, c2 = self._pre_decode_fn(spec)(
-                    p, x_in, old_c, clen)
-            self.stats.jit_calls += 1
+                x2, flat, r, needed_dev, c2 = self._dispatch(
+                    self._pre_decode_fn(spec), p, x_in, old_c, clen)
             self._clock += 1.0
             self.prefetcher.advance(self._clock)
             if li in predicted:
@@ -1496,9 +1507,8 @@ class SlotBufferEngine:
                               for k in self._prefetch_pending if k[0] == li}
                 pending.append((li, i, needed_dev, snap, ready_snap))
                 self._window_layers.add(li)
-                x = self._ffn_fn(spec)(p, self.buffer, jnp.asarray(snap),
-                                       x2, flat, r)
-                self.stats.jit_calls += 1
+                x = self._dispatch(self._ffn_fn(spec), p, self.buffer,
+                                   jnp.asarray(snap), x2, flat, r)
                 self.stats.spec_layers += 1
                 i += 1
                 li += 1
@@ -1518,20 +1528,321 @@ class SlotBufferEngine:
             self._sync_moe_layer(li, needed, predicted)
             caches[i] = c2
             slot_map = jnp.asarray(self.table.layer_slot_map(li))
-            x = self._ffn_fn(spec)(p, self.buffer, slot_map, x2, flat, r)
-            self.stats.jit_calls += 1
+            x = self._dispatch(self._ffn_fn(spec), p, self.buffer,
+                               slot_map, x2, flat, r)
             i += 1
             li += 1
 
         self.cache.protect_early_layers(
             max(1, min(self._s_eff(), len(self.moe_layer_ids))))
-        logits = self._logits_fn()(self.params, x)
-        self.stats.jit_calls += 1
+        logits = self._dispatch(self._logits_fn(), self.params, x)
         self.controller.update_layer_time(
             (time.perf_counter() - t0) / max(len(self.specs), 1))
         if batched:
             # only occupied slots advance; idle rows hold position so a
             # later prefill_into overwrites a stable garbage row
+            return logits, DecodeState(
+                caches, clen + active_dev.astype(jnp.int32),
+                pos=np.where(act, np.asarray(state.pos) + 1,
+                             np.asarray(state.pos)),
+                active=act.copy())
+        return logits, DecodeState(caches, clen + 1, pos=state.pos + 1)
+
+
+    # -- decode superkernel (segment-fused batched decode) -------------------
+    def _sk_segments(self):
+        """Partition the layer stack into decode SEGMENTS: each segment is
+        the run of dense layers up to and including the next MoE layer (so
+        segment index == MoE layer index li), plus a trailing run of dense
+        layers folded into the logits dispatch. One jitted dispatch per
+        segment is the whole point: the per-step dispatch count becomes
+        (#MoE layers + 1) instead of ~(2 * #MoE + #dense + 2)."""
+        if self._sk_segs is None:
+            segs, cur = [], []
+            for i, spec in enumerate(self.specs):
+                cur.append(i)
+                if spec.is_moe:
+                    segs.append(cur)
+                    cur = []
+            assert segs, "superkernel decode requires at least one MoE layer"
+            self._sk_segs = (segs, cur)
+        return self._sk_segs
+
+    def _sk_seg_fn(self, specs_seg, s: int, batched: bool, first: bool,
+                   with_logits: bool = False):
+        """ONE jitted dispatch for a decode segment: (embed if first) ->
+        dense layers -> MoE attention -> fused route+top-k+slot-FFN Pallas
+        kernel -> residual, plus the (1+s, E) needed/pre-gate mask block.
+        Attention runs through the fused decode kernels (`use_kernel=True`);
+        the MoE entry always takes a logit-bias array (zeros when
+        cache-aware routing is off — adding fp32 zeros is bit-exact).
+        `with_logits`: all-MoE models have no trailing dense run, so the
+        LAST segment folds final-norm logits in too — no tail dispatch."""
+        key = ("sk_seg", tuple(self._spec_key(sp) for sp in specs_seg), s,
+               batched, first, with_logits)
+        if key not in self._fns:
+            cfg, model = self.cfg, self.model
+            cspecs = [self._spec_key(sp) for sp in specs_seg]
+            E = cfg.moe.num_experts
+            k_pred = min(E, cfg.moe.top_k + self.pregate_margin)
+            from repro.models.transformer import _zc
+
+            def fn(params, ps, seg_caches, x, clen, slot_weights, slot_map,
+                   routers_next, bias_this, bias_next, active=None):
+                if first:
+                    pos = jnp.broadcast_to(
+                        jnp.asarray(clen).reshape(-1, 1), (x.shape[0], 1))
+                    x = model.embed(params, x[:, None], positions=pos)
+                new_caches = []
+                for j, cspec in enumerate(cspecs[:-1]):
+                    x, c = layer_decode(ps[j], cfg, cspec, x, seg_caches[j],
+                                        clen, use_kernel=True)
+                    new_caches.append(c)
+                p = ps[-1]
+                stripped, spec_nf = split_ffn_params(p, cspecs[-1])
+                x, c = layer_decode(stripped, cfg, spec_nf, x,
+                                    seg_caches[-1], clen, use_kernel=True)
+                new_caches.append(c)
+                B, T, d = x.shape
+                h2 = rms_norm(x, p["ffn_norm"], cfg.norm_eps,
+                              zero_centered=_zc(cfg))
+                flat = h2.reshape(-1, d)
+                out, gates, ids = moe_mod.moe_slotbuf_fused(
+                    p["moe"], slot_weights, slot_map, flat, cfg.moe,
+                    logit_bias=bias_this)
+                ff = out.reshape(B, T, d)
+                if "post_ffn_norm" in p:
+                    ff = rms_norm(ff, p["post_ffn_norm"], cfg.norm_eps,
+                                  zero_centered=_zc(cfg))
+                x = x + ff
+                ids_m = ids
+                if active is not None:
+                    ids_m = jnp.where(active[:, None], ids_m, E)
+                rows = [jnp.zeros((E,), jnp.bool_)
+                        .at[ids_m.reshape(-1)].set(True, mode="drop")[None]]
+                for j in range(s):
+                    rn = moe_mod.route(routers_next[j], flat, k_pred,
+                                       cfg.moe.router_norm_topk,
+                                       logit_bias=bias_next[j])
+                    idn = rn.expert_ids
+                    if active is not None:
+                        idn = jnp.where(active[:, None], idn, E)
+                    rows.append(jnp.zeros((E,), jnp.bool_)
+                                .at[idn.reshape(-1)].set(True,
+                                                         mode="drop")[None])
+                logits = (model.logits(params, x[:, -1]) if with_logits
+                          else None)
+                return x, jnp.concatenate(rows, axis=0), new_caches, logits
+            self._fns[key] = jax.jit(fn)
+        return self._fns[key]
+
+    def _sk_tail_fn(self, specs_tail):
+        """Trailing dense layers + final-norm logits in ONE dispatch."""
+        key = ("sk_tail", tuple(self._spec_key(sp) for sp in specs_tail))
+        if key not in self._fns:
+            cfg, model = self.cfg, self.model
+            cspecs = [self._spec_key(sp) for sp in specs_tail]
+
+            def fn(params, ps, tail_caches, x, clen):
+                new_caches = []
+                for j, cspec in enumerate(cspecs):
+                    x, c = layer_decode(ps[j], cfg, cspec, x, tail_caches[j],
+                                        clen, use_kernel=True)
+                    new_caches.append(c)
+                return model.logits(params, x[:, -1]), new_caches
+            self._fns[key] = jax.jit(fn)
+        return self._fns[key]
+
+    def _decode_step_superkernel(self, tok, state: DecodeState
+                                 ) -> Tuple[jnp.ndarray, DecodeState]:
+        """One decode step through the segment-fused superkernel path.
+
+        Same contract as `decode_step` (bit-exact token stream vs the
+        einsum-oracle engine at route_bias 0), different dispatch shape:
+        each segment is ONE jitted launch that fuses attention (Pallas
+        decode kernel), routing + top-k + slot-indirect expert FFN (Pallas
+        MoE kernel) and the next-s pre-gate. Because routing happens INSIDE
+        the launch, every segment executes speculatively against current
+        residency; the accumulated needed masks are pulled at sync segments
+        and verified (needed subset of resident-at-dispatch), rolling back
+        and replaying from the first mis-speculated segment with its now-
+        known demand set on failure. Per-step dispatches: #segments + 1
+        (tail) + pulls — vs ~2 per MoE layer + dense + embed + logits on
+        the standard path."""
+        ca = self.route_bias > 0.0
+        batched = state.batched
+        if batched:
+            act = np.asarray(state.active, bool)
+            if act.any():
+                assert int(np.asarray(state.pos)[act].max()) < self.max_seq, (
+                    f"decode past max_seq={self.max_seq} would silently wrap "
+                    "the KV ring buffer; raise max_seq at engine "
+                    "construction or retire the request")
+            active_dev = jnp.asarray(act)
+        else:
+            assert state.pos < self.max_seq, (
+                f"decode past max_seq={self.max_seq} would silently wrap the "
+                "KV ring buffer; raise max_seq at engine construction")
+            active_dev = None
+        t0 = time.perf_counter()
+        self.stats.steps += 1
+        tok = jnp.asarray(tok, jnp.int32)
+        caches, clen = list(state.caches), state.cache_len
+        segs, tail = self._sk_segments()
+        fold_logits = not tail
+        logits = None
+        E = self.cfg.moe.num_experts
+
+        predicted: Dict[int, set] = {}
+        demand_hint: Dict[int, set] = {}   # li -> known demand after replay
+        # pending: (li, seg_i, masks_dev, slot_snap, ready_snap, hint_set)
+        pending: List[tuple] = []
+        ckpt: Dict[int, tuple] = {}        # seg_i -> (x_in, [seg caches])
+        self._window_layers.clear()
+        self._evicted_spec.clear()
+
+        def replay_from(fail_idx: int, needed_h) -> Tuple[int, jnp.ndarray]:
+            plj, psi = pending[fail_idx][0], pending[fail_idx][1]
+            self.stats.replays += 1
+            for kk, (_, cs_old) in ckpt.items():
+                if kk >= psi:
+                    for jj, aj in enumerate(segs[kk]):
+                        caches[aj] = cs_old[jj]
+            x_r = ckpt[psi][0]
+            for kk in [kk for kk in self._evicted_spec if kk[0] >= plj]:
+                del self._evicted_spec[kk]
+                self.prefetcher.note_unused(kk)
+                self.controller.record_overfetch()
+            # the pulled mask IS the failed segment's demand: replay it with
+            # residency ensured up front (union with any earlier hint so the
+            # hint set grows monotonically -> the replay loop terminates)
+            demand_hint[plj] = demand_hint.get(plj, set()) | {
+                int(e) for e in needed_h}
+            predicted.clear()
+            pending.clear()
+            ckpt.clear()
+            self._window_layers.clear()
+            return psi, x_r
+
+        def pull_and_verify():
+            """ONE blocking pull of every pending segment's mask block.
+            Returns (fail_idx, fail_needed, sync_rows): fail_idx < 0 on
+            success, where sync_rows is the LAST segment's full (1+s, E)
+            block (needed row + pre-gate rows) for `_decode_sync_rows`."""
+            stacked = (pending[0][2] if len(pending) == 1
+                       else jnp.concatenate([pp[2] for pp in pending], 0))
+            masks_h = np.asarray(stacked)
+            self.stats.host_syncs += 1
+            row = 0
+            for idx, (plj, _, mdev, snap, rsnap, hint) in enumerate(pending):
+                needed = np.nonzero(masks_h[row])[0]
+                self._settle_prediction(plj, {int(e) for e in needed},
+                                        ready_at_dispatch=rsnap)
+                if any(snap[int(e)] < 0 for e in needed):
+                    # a hinted replay dispatched after best-effort
+                    # ensure_resident: a still-missing expert within the
+                    # hint is capacity overflow (its tokens dropped via the
+                    # dead sentinel, as on the standard path), not a
+                    # misprediction — don't replay forever
+                    if not (hint and {int(e) for e in needed} <= hint):
+                        return idx, needed, None
+                row += mdev.shape[0]
+            last_rows = masks_h[row - pending[-1][2].shape[0]: row]
+            return -1, None, last_rows
+
+        si = 0
+        n_segs = len(segs)
+        while True:
+            if si == n_segs:
+                if pending:
+                    fail, needed_h, _ = pull_and_verify()
+                    if fail >= 0:
+                        si, x = replay_from(fail, needed_h)
+                        continue
+                    pending.clear()
+                    ckpt.clear()
+                    self._window_layers.clear()
+                break
+            li = si
+            seg = segs[si]
+            first = si == 0
+            hint = demand_hint.pop(li, set())
+            if hint:
+                self.cache.retier([(li, int(e)) for e in sorted(hint)],
+                                  recent_layers=(), current_layer=li)
+                self.ensure_resident(li, sorted(hint))
+            elif li in predicted:
+                self.ensure_resident(li, sorted(predicted[li]),
+                                     speculative=True)
+            sync = li not in predicted or bool(hint)
+            s = self._horizon(li) if sync else 0
+            if ca:
+                bias_this = self._residency_bias(li)
+                bias_next = (self._pregate_bias(li, s) if s > 0
+                             else jnp.zeros((0, E), jnp.float32))
+            else:
+                bias_this = jnp.zeros((E,), jnp.float32)
+                bias_next = jnp.zeros((s, E), jnp.float32)
+            x_in = tok if first else x
+            wl = fold_logits and si == n_segs - 1
+            ckpt[si] = (x_in, [caches[j] for j in seg])
+            slot_map = jnp.asarray(self.table.layer_slot_map(li))
+            x, masks_dev, new_cs, lg = self._dispatch(
+                self._sk_seg_fn([self.specs[j] for j in seg], s, batched,
+                                first, wl),
+                self.params if first or wl else None,
+                [self._p[j] for j in seg],
+                [caches[j] for j in seg], x_in, clen, self.buffer, slot_map,
+                self._router_slice(li, s), bias_this, bias_next, active_dev)
+            if wl:
+                logits = lg
+            for jj, aj in enumerate(seg):
+                caches[aj] = new_cs[jj]
+            self._clock += 1.0
+            self.prefetcher.advance(self._clock)
+            snap = self.table.layer_slot_map(li)
+            ready_snap = {kk: self.prefetcher.is_ready(kk, self._clock)
+                          for kk in self._prefetch_pending if kk[0] == li}
+            pending.append((li, si, masks_dev, snap, ready_snap, hint))
+            self._window_layers.add(li)
+            if not sync:
+                self.stats.spec_layers += 1
+                si += 1
+                continue
+            fail, needed_h, sync_rows = pull_and_verify()
+            if fail >= 0:
+                si, x = replay_from(fail, needed_h)
+                continue
+            needed, pred = self._decode_sync_rows(li, s, sync_rows)
+            predicted.clear()
+            predicted.update(pred)
+            self.cache.retier(
+                [(li, int(e)) for e in needed]
+                + [(lj, int(e)) for lj, es in pred.items() for e in es],
+                recent_layers=(), current_layer=li)
+            # verified: pure LRU touches (all needed are resident), unless a
+            # hinted segment overflowed capacity — then this books the miss
+            self.ensure_resident(li, needed)
+            if pred:
+                self.prefetch_window(
+                    [(lj, sorted(es)) for lj, es in sorted(pred.items())])
+            pending.clear()
+            ckpt.clear()
+            self._window_layers.clear()
+            si += 1
+
+        if not fold_logits:
+            logits, new_tc = self._dispatch(
+                self._sk_tail_fn([self.specs[j] for j in tail]),
+                self.params, [self._p[j] for j in tail],
+                [caches[j] for j in tail], x, clen)
+            for jj, aj in enumerate(tail):
+                caches[aj] = new_tc[jj]
+        self.cache.protect_early_layers(
+            max(1, min(self._s_eff(), len(self.moe_layer_ids))))
+        self.controller.update_layer_time(
+            (time.perf_counter() - t0) / max(len(self.specs), 1))
+        if batched:
             return logits, DecodeState(
                 caches, clen + active_dev.astype(jnp.int32),
                 pos=np.where(act, np.asarray(state.pos) + 1,
