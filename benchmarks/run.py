@@ -15,13 +15,13 @@ from benchmarks.common import Csv
 
 def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
-    from benchmarks import (bench_cache_aware, bench_decode, bench_prefill,
-                            bench_serving_engine, bench_slotpath,
-                            fig2_step_size, fig3_batch_size, fig4_diversity,
-                            fig7_overall_latency, fig8_predictor_accuracy,
-                            fig9_cache_miss, fig10_lru,
-                            fig11_cache_aware_routing, fig_serving,
-                            kernels_bench, roofline)
+    from benchmarks import (bench_cache_aware, bench_decode, bench_faults,
+                            bench_prefill, bench_serving_engine,
+                            bench_slotpath, fig2_step_size, fig3_batch_size,
+                            fig4_diversity, fig7_overall_latency,
+                            fig8_predictor_accuracy, fig9_cache_miss,
+                            fig10_lru, fig11_cache_aware_routing,
+                            fig_serving, kernels_bench, roofline)
     modules = {
         "fig2": fig2_step_size, "fig3": fig3_batch_size,
         "fig4": fig4_diversity, "fig7": fig7_overall_latency,
@@ -30,6 +30,7 @@ def main() -> None:
         "serving": fig_serving, "slotpath": bench_slotpath,
         "decode": bench_decode, "serving_engine": bench_serving_engine,
         "prefill": bench_prefill, "cache_aware": bench_cache_aware,
+        "faults": bench_faults,
         "kernels": kernels_bench, "roofline": roofline,
     }
     csv = Csv()

@@ -183,6 +183,12 @@ class ServingReport:
     workload: str = ""
     makespan_s: float = 0.0
     mean_occupancy: float = 0.0
+    # health counters (fault injection / graceful degradation): filled
+    # identically by the engine and simulator backends
+    n_link_failures: int = 0      # injected transfer failures observed
+    n_retries: int = 0            # demand-transfer retry attempts
+    n_degraded_steps: int = 0     # decode iterations in degraded mode
+    n_shed: int = 0               # requests dropped past their deadline
 
     def add_request(self, m: RequestMetrics) -> None:
         self.requests.append(m)
@@ -243,6 +249,10 @@ class ServingReport:
             "waiting_s": self.run.total_waiting_s,
             "cache_miss_s": self.run.total_cache_miss_s,
             "hit_rate": self.run.hit_rate,
+            "n_link_failures": self.n_link_failures,
+            "n_retries": self.n_retries,
+            "n_degraded_steps": self.n_degraded_steps,
+            "n_shed": self.n_shed,
         }
         for name, dist in (("ttft", self.ttft), ("tpot", self.tpot),
                            ("queue_delay", self.queue_delay)):

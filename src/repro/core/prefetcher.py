@@ -33,6 +33,7 @@ class Transfer:
     start_t: float = -1.0
     done_t: float = -1.0
     kind: str = "prefetch"     # prefetch | miss | writeback
+    failed: bool = False       # declared lost: must never settle as a hit
 
 
 class TransferLink:
@@ -45,7 +46,24 @@ class TransferLink:
         self._busy_until = 0.0
         self.in_flight: Dict[Key, Transfer] = {}
         self.completed: List[Transfer] = []
+        self.failed: List[Transfer] = []
+        self.n_failed = 0
         self.bytes_moved = 0.0
+        # optional fault hooks (core.faults.FaultInjector.attach_link):
+        # bandwidth_hook(tr, start) -> multiplier, latency_hook(tr, start)
+        # -> extra seconds. None (the default) keeps transfer timing
+        # byte-identical to a hook-free link.
+        self.bandwidth_hook = None
+        self.latency_hook = None
+
+    def _duration(self, tr: Transfer, start: float) -> float:
+        bw = self.bandwidth
+        if self.bandwidth_hook is not None:
+            bw *= max(float(self.bandwidth_hook(tr, start)), 1e-9)
+        dur = tr.nbytes / bw
+        if self.latency_hook is not None:
+            dur += max(float(self.latency_hook(tr, start)), 0.0)
+        return dur
 
     def submit(self, tr: Transfer) -> Transfer:
         heapq.heappush(self._queue, (tr.priority, next(self._counter), tr))
@@ -73,7 +91,7 @@ class TransferLink:
                 break
             heapq.heappop(self._queue)
             tr.start_t = start
-            tr.done_t = start + tr.nbytes / self.bandwidth
+            tr.done_t = start + self._duration(tr, start)
             self._busy_until = tr.done_t
             self.bytes_moved += tr.nbytes
             self.completed.append(tr)
@@ -93,7 +111,7 @@ class TransferLink:
         while self._queue:
             prio, seq, tr = heapq.heappop(self._queue)
             tr.start_t = max(self._busy_until, tr.issue_t)
-            tr.done_t = tr.start_t + tr.nbytes / self.bandwidth
+            tr.done_t = tr.start_t + self._duration(tr, tr.start_t)
             self._busy_until = tr.done_t
             self.bytes_moved += tr.nbytes
             self.completed.append(tr)
@@ -109,6 +127,30 @@ class TransferLink:
         kept = [item for item in self._queue if item[2].key != key]
         if len(kept) == len(self._queue):
             return False
+        self._queue = kept
+        heapq.heapify(self._queue)
+        self.in_flight.pop(key, None)
+        return True
+
+    def fail(self, key: Key) -> bool:
+        """A queued transfer for `key` failed: remove it from the queue and
+        `in_flight` and record it under `failed`. Unlike a completion it
+        never advances `busy_until`, never counts toward `bytes_moved`,
+        and never appears in `completed` — the link accounting invariants
+        (bytes_moved == sum of completed sizes) survive any failure
+        interleaving. Returns True if a transfer was failed."""
+        dropped = None
+        kept = []
+        for item in self._queue:
+            if dropped is None and item[2].key == key:
+                dropped = item[2]
+            else:
+                kept.append(item)
+        if dropped is None:
+            return False
+        dropped.failed = True
+        self.failed.append(dropped)
+        self.n_failed += 1
         self._queue = kept
         heapq.heapify(self._queue)
         self.in_flight.pop(key, None)
@@ -144,12 +186,18 @@ class Prefetcher:
         # evicted expert still occupies the modeled link and re-lands via
         # advance(), preserving the committed figure baselines.
         self.cancel_on_forget = cancel_on_forget
+        # optional core.faults.FaultInjector: transfer outcomes are drawn at
+        # modeled completion time (the simulator mirror). The live engine
+        # leaves this None and decides failures before issuing instead.
+        self.injector = None
         self.ready_at: Dict[Key, float] = {}
         self.issued: Dict[Key, Transfer] = {}
         self.n_prefetches = 0
         self.n_misses = 0
         self.n_late_prefetches = 0       # prefetched, but demanded before done
         self.n_unused_prefetches = 0     # prefetched, evicted without a demand
+        self.n_failed = 0                # transfers declared lost
+        self.n_retries = 0               # demand resubmissions after failure
         self._demanded: set = set()      # keys that saw a demand() call
         self._completed_seen = 0          # monotone index into link.completed
         self._pending: List[Transfer] = []  # completed but not yet surfaced
@@ -171,8 +219,16 @@ class Prefetcher:
         for key in keys:
             self.prefetch(key, now)
 
-    def demand(self, key: Key, now: float) -> float:
-        """Miss path: fetch `key` at top priority; returns ready time."""
+    def demand(self, key: Key, now: float, max_retries: int = 0,
+               backoff_s: float = 0.0) -> Optional[float]:
+        """Miss path: fetch `key` at top priority; returns ready time.
+
+        With a fault `injector` attached, each attempt's outcome is drawn
+        at its modeled completion time; a failed attempt is scrubbed (it
+        occupied the link but delivers nothing) and resubmitted at miss
+        priority after exponential backoff, up to `max_retries` times.
+        Returns None when every attempt failed — the caller must treat the
+        expert as non-resident rather than wait forever."""
         self._demanded.add(key)
         if key in self.ready_at:
             return self.ready_at[key]
@@ -180,13 +236,55 @@ class Prefetcher:
             self.n_late_prefetches += 1
             self.link.promote(key)
         else:
-            tr = Transfer(key, self.expert_bytes, PRIO_MISS, now, kind="miss")
-            self.link.submit(tr)
-            self.issued[key] = tr
+            self._submit_demand(key, now)
+        attempt = 0
+        while True:
+            t_done = self.link.finish(key, now)
+            if self.injector is None \
+                    or not self.injector.transfer_fails(key, t_done):
+                self._complete(key, t_done)
+                return t_done
+            self.n_failed += 1
+            self._scrub_failed(key)
+            if attempt >= max_retries:
+                return None
+            attempt += 1
+            self.n_retries += 1
+            now = t_done + backoff_s * (2.0 ** (attempt - 1))
+            self._submit_demand(key, now, retry=True)
+
+    def _submit_demand(self, key: Key, now: float,
+                       retry: bool = False) -> None:
+        tr = Transfer(key, self.expert_bytes, PRIO_MISS, now, kind="miss")
+        self.link.submit(tr)
+        self.issued[key] = tr
+        if not retry:
             self.n_misses += 1
-        t_done = self.link.finish(key, now)
-        self._complete(key, t_done)
-        return t_done
+
+    def _scrub_failed(self, key: Key) -> None:
+        """A demand attempt for `key` completed-but-failed: mark the exact
+        transfer so advance() can never surface it into ready_at, and drop
+        the issued entry so a later demand is a fresh submission."""
+        tr = self.issued.pop(key, None)
+        if tr is not None:
+            tr.failed = True
+            self._pending = [p for p in self._pending if p is not tr]
+
+    def fail(self, key: Key) -> bool:
+        """Declare `key`'s in-flight transfer failed (external fault): the
+        queued copy is scrubbed from the link, the issued/pending
+        bookkeeping is dropped, and a later demand() for the key is a
+        fresh miss. A transfer that already *delivered* (`ready_at`) is
+        not rescinded. Returns True if a live transfer was failed."""
+        tr = self.issued.pop(key, None)
+        dropped = self.link.fail(key)
+        if tr is not None:
+            tr.failed = True
+            self._pending = [p for p in self._pending if p is not tr]
+        if tr is None and not dropped:
+            return False
+        self.n_failed += 1
+        return True
 
     def writeback(self, now: float) -> None:
         """Baseline swap-out contention: eviction occupies the link."""
@@ -205,6 +303,10 @@ class Prefetcher:
         still = []
         for tr in self._pending:
             if tr.done_t <= t:
+                # a failed transfer's completion must never settle as a
+                # prefetch hit — drop it silently
+                if tr.failed:
+                    continue
                 # under cancel_on_forget, surface only the EXACT transfer
                 # currently expected for the key (identity, not membership):
                 # a stale completion of a forgotten-then-reissued key must
@@ -212,9 +314,19 @@ class Prefetcher:
                 # transfer's issued entry
                 if self.cancel_on_forget and self.issued.get(tr.key) is not tr:
                     continue
-                if tr.key not in self.ready_at:
-                    self._complete(tr.key, tr.done_t)
-                    arrived.append(tr.key)
+                if tr.key in self.ready_at:
+                    continue
+                if self.injector is not None \
+                        and self.injector.transfer_fails(tr.key, tr.done_t):
+                    # the prefetch completed but its payload is lost: a
+                    # later demand for the key must be a fresh miss
+                    tr.failed = True
+                    self.n_failed += 1
+                    if self.issued.get(tr.key) is tr:
+                        del self.issued[tr.key]
+                    continue
+                self._complete(tr.key, tr.done_t)
+                arrived.append(tr.key)
             else:
                 still.append(tr)
         self._pending = still

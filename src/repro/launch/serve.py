@@ -28,6 +28,7 @@ import numpy as np
 from repro.configs.registry import get_smoke_config
 from repro.core import (FeatureSpec, ForestPredictor, TraceLog, baseline,
                         expertflow, pregate_fixed, promoe_like)
+from repro.core.faults import FaultPlan
 from repro.data.workloads import (WORKLOAD_PATTERNS, make_workload,
                                   prompt_tokens)
 from repro.runtime.engine import Engine
@@ -65,12 +66,16 @@ def _serve_engine(args, cfg, specs, rng) -> None:
     max_seq = max(r.prompt_len for r in requests) + args.max_new + 8
     eng = Engine(cfg, max_seq=max_seq)
     slots = max(2, int(cfg.moe.num_experts * args.capacity_frac))
+    plan = FaultPlan.from_arg(args.fault_plan)
     sb = SlotBufferEngine(cfg, eng.params, eng.model,
-                          n_slots_per_layer=slots, max_seq=max_seq)
+                          n_slots_per_layer=slots, max_seq=max_seq,
+                          faults=plan, retry_max=args.retry_max,
+                          retry_backoff_s=args.retry_backoff)
     srv = ServingEngine(sb, EngineServingConfig(
         max_batch=args.batch, prefill_chunk=args.prefill_chunk,
         route_bias=args.route_bias,
-        route_bias_adaptive=args.route_bias_adaptive))
+        route_bias_adaptive=args.route_bias_adaptive,
+        deadline_s=args.deadline))
     rep = srv.serve(requests)
     s = rep.summary()
     print(f"engine backend: slots/layer={slots} batch={args.batch} "
@@ -88,6 +93,11 @@ def _serve_engine(args, cfg, specs, rng) -> None:
     print(f"  ttft split: queue={s['ttft_queue_mean_s']*1e3:.3f}ms "
           f"prefill={s['ttft_prefill_mean_s']*1e3:.3f}ms "
           f"first_step={s['ttft_first_step_mean_s']*1e3:.3f}ms")
+    if plan is not None:
+        print(f"  health: link_failures={s['n_link_failures']} "
+              f"retries={s['n_retries']} "
+              f"degraded_steps={s['n_degraded_steps']} "
+              f"shed={s['n_shed']}")
 
 
 def main() -> None:
@@ -117,6 +127,20 @@ def main() -> None:
                     help="let the step-size controller ramp the routing "
                          "bias within [0, --route-bias] from its "
                          "stall/overfetch thresholds")
+    ap.add_argument("--fault-plan", default=None,
+                    help="fault-injection plan: preset name "
+                         f"({'/'.join(FaultPlan.PRESETS)}), inline JSON, "
+                         "or a JSON file path. Unset = no fault layer "
+                         "(bit-exact)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request SLO deadline in seconds (relative to "
+                         "arrival); queued requests past it are shed")
+    ap.add_argument("--retry-max", type=int, default=3,
+                    help="bounded retries for failed demand swap-ins "
+                         "before degrading to resident-only routing")
+    ap.add_argument("--retry-backoff", type=float, default=1e-3,
+                    help="base exponential-backoff delay (s) between "
+                         "demand-transfer retries")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.requests < 1:
@@ -174,7 +198,11 @@ def main() -> None:
         expert_bytes=max(ebytes, 4e6),   # floor so transfers are visible
         layer_time_s=layer_time_decode(cfg, hw, args.batch, 64),
         capacity_experts=max(4, int(L * M * args.capacity_frac)))
-    scfg = ServingConfig(max_batch=args.batch)
+    scfg = ServingConfig(max_batch=args.batch,
+                         fault_plan=FaultPlan.from_arg(args.fault_plan),
+                         retry_max=args.retry_max,
+                         retry_backoff_s=args.retry_backoff,
+                         deadline_s=args.deadline)
     print(f"platform={hw.name} expert_bytes={sim.expert_bytes/1e6:.1f}MB "
           f"layer_time={sim.layer_time_s*1e3:.3f}ms "
           f"capacity={sim.capacity_experts}/{L*M} slots={args.batch}")
@@ -196,6 +224,12 @@ def main() -> None:
               f"tpot_p50={s['tpot_p50_s']*1e3:7.3f}ms "
               f"tpot_p99={s['tpot_p99_s']*1e3:7.3f}ms "
               f"hit={s['hit_rate']:.3f} occ={s['mean_occupancy']:.2f}")
+        if args.fault_plan is not None:
+            print(f"  {'':14s} health: "
+                  f"link_failures={s['n_link_failures']} "
+                  f"retries={s['n_retries']} "
+                  f"degraded_steps={s['n_degraded_steps']} "
+                  f"shed={s['n_shed']}")
 
 
 if __name__ == "__main__":

@@ -70,6 +70,8 @@ class BatcherStats:
     decode_iterations: int = 0
     occupancy_sum: float = 0.0
     admission_deferred: int = 0    # admit() passes blocked by the cap
+    shed: int = 0                  # requests dropped past their deadline
+    brownout_deferred: int = 0     # admit() passes paused while degraded
 
     @property
     def mean_occupancy(self) -> float:
@@ -80,12 +82,20 @@ class ContinuousBatcher:
     """Slot-based continuous batching over a fixed max batch size."""
 
     def __init__(self, max_batch: int,
-                 admission: Optional[WorkingSetAdmission] = None):
+                 admission: Optional[WorkingSetAdmission] = None,
+                 brownout: Optional[Callable[[], bool]] = None):
         self.max_batch = max_batch
         self.admission = admission
+        # brownout() -> True pauses admissions while the engine is degraded
+        # (straggler drain / fault-degraded routing / tripped watchdog).
+        # The queue head still admits into an EMPTY batch, preserving the
+        # no-starvation guarantee: even a permanently-degraded engine keeps
+        # serving, one working set at a time.
+        self.brownout = brownout
         self.waiting: List[Request] = []
         self.active: Dict[int, Request] = {}   # slot -> request
         self.free_slots = list(range(max_batch))
+        self.shed: List[Request] = []          # dropped past their deadline
         self.stats = BatcherStats()
 
     def submit(self, req: Request) -> None:
@@ -101,10 +111,24 @@ class ContinuousBatcher:
         shared cache's sustainable budget."""
         admitted = []
         while self.waiting and self.free_slots:
-            if now is not None and self.waiting[0].arrival_s > now:
+            head = self.waiting[0]
+            if now is not None and head.arrival_s > now:
+                break
+            # load shedding: a queued request past its deadline can no
+            # longer meet its SLO — drop it (even mid-brownout, so expired
+            # work drains instead of pinning the queue) and keep admitting
+            if now is not None and head.deadline_s is not None \
+                    and now - head.arrival_s > head.deadline_s:
+                self.waiting.pop(0)
+                head.slot = -1
+                self.shed.append(head)
+                self.stats.shed += 1
+                continue
+            if self.brownout is not None and self.active and self.brownout():
+                self.stats.brownout_deferred += 1
                 break
             if self.admission is not None and not self.admission.admits(
-                    self.waiting[0], list(self.active.values())):
+                    head, list(self.active.values())):
                 self.stats.admission_deferred += 1
                 break
             req = self.waiting.pop(0)

@@ -40,6 +40,7 @@ from repro.core.cache import TwoLevelLRU
 from repro.core.cache_aware import residency_logit_bias
 from repro.core.expert_buffer import (HostExpertStore, SlotTable, make_buffer,
                                       swap_in, swap_in_many)
+from repro.core.faults import FaultInjector, FaultPlan, StepWatchdog
 from repro.core.prefetcher import Prefetcher, TransferLink
 from repro.core.step_size import StepSizeController
 from repro.core.trace import Sample, TraceLog
@@ -287,6 +288,10 @@ class SlotPathStats:
     steps: int = 0             # forward() / decode_step invocations
     spec_layers: int = 0       # MoE layers executed speculatively (no sync)
     replays: int = 0           # speculative windows rolled back on mispredict
+    link_failures: int = 0     # injected transfer failures observed
+    retries: int = 0           # demand swap-in retry attempts
+    degraded_steps: int = 0    # decode steps in degraded mode (resident-only
+                               # routing engaged or watchdog tripped)
 
     def snapshot(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -393,7 +398,12 @@ class SlotBufferEngine:
                  controller: Optional[StepSizeController] = None,
                  pregate_margin: int = 2, route_bias: float = 0.0,
                  route_bias_adaptive: bool = False,
-                 use_superkernel: bool = False):
+                 use_superkernel: bool = False,
+                 faults: Optional[FaultPlan] = None,
+                 retry_max: int = 3, retry_backoff_s: float = 1e-3,
+                 degraded_route_bias: float = 4.0,
+                 degraded_recover_streak: int = 8,
+                 watchdog: Optional[StepWatchdog] = None):
         assert cfg.moe is not None
         self.cfg = cfg
         self.model = model
@@ -476,6 +486,29 @@ class SlotBufferEngine:
         self.route_bias_adaptive = False
         if route_bias:
             self.set_route_bias(route_bias, adaptive=route_bias_adaptive)
+        # chaos / graceful degradation (core.faults): deterministic injected
+        # transfer failures with bounded retry-with-backoff, a resident-only
+        # degraded-routing mode (residency bias at a capped delta, so a dead
+        # link can never deadlock a decode step), and a step watchdog that
+        # collapses the speculative horizon S->0 under wall-time blowout.
+        # faults=None (or a disabled plan) leaves every hot path — and the
+        # selected jit traces — byte-identical to a pre-feature engine.
+        self.faults: Optional[FaultInjector] = None
+        if faults is not None and faults.enabled:
+            self.faults = FaultInjector(faults)
+            # brownout/jitter/stalls shape the VIRTUAL link timing: late
+            # prefetches and demand stalls then feed the controller's
+            # bandwidth/stall signals exactly like a genuinely slow link
+            self.faults.attach_link(self.link)
+            if watchdog is None:
+                watchdog = StepWatchdog()
+        self.watchdog = watchdog
+        self.retry_max = int(retry_max)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.degraded_route_bias = float(degraded_route_bias)
+        self.degraded_recover_streak = int(degraded_recover_streak)
+        self._degraded = False
+        self._fault_ok_streak = 0
 
     # -- jitted per-layer functions (compiled once per layer shape) ---------
     @staticmethod
@@ -757,8 +790,16 @@ class SlotBufferEngine:
     def _route_bias_strength(self) -> float:
         """Current perturbation strength delta (router-logit units)."""
         if self.route_bias_adaptive:
-            return float(min(self.controller.route_bias, self.route_bias))
-        return self.route_bias
+            base = float(min(self.controller.route_bias, self.route_bias))
+        else:
+            base = self.route_bias
+        if self._degraded:
+            # resident-only degraded routing: with the link effectively
+            # dead, stop steering tokens at non-resident experts — but the
+            # perturbation stays a bounded delta (router KL <=
+            # degraded_route_bias nats per layer), never a hard mask
+            return max(base, self.degraded_route_bias)
+        return base
 
     def _residency_bias(self, li: int) -> jnp.ndarray:
         """(E,) device bias for MoE layer li from the HOST slot table — the
@@ -787,6 +828,13 @@ class SlotBufferEngine:
         """Lookahead from MoE layer li, clamped to the remaining sweep."""
         if not self.prefetch_enabled:
             return 0
+        if self.watchdog is not None and self.watchdog.tripped:
+            # step deadline blown: collapse speculation to S=0 (sync every
+            # MoE layer) until the watchdog's hysteresis re-expands it
+            return 0
+        if self.faults is not None \
+                and self.faults.predictor_blackout(self._clock):
+            return 0       # predictor signal dark: nothing to speculate on
         remaining = len(self.moe_layer_ids) - (li + 1)
         if self.fixed_s is not None:
             return max(0, min(self.fixed_s, remaining))
@@ -827,6 +875,58 @@ class SlotBufferEngine:
                      for j in range(s)}
         return needed, predicted
 
+    # -- fault handling ------------------------------------------------------
+    def _fault_transfer_ok(self, key: Tuple[int, int], *,
+                           demand: bool) -> bool:
+        """Decide (deterministically, from the FaultPlan) whether a swap-in
+        for `key` goes through. Demand transfers get bounded
+        retry-with-backoff; exhausting the retries enters degraded mode.
+        Speculative fills are best-effort: one attempt, no retry, and no
+        degraded-mode transition (a failed prefetch costs nothing — the
+        expert is simply re-demanded later). Always True without faults."""
+        fi = self.faults
+        if fi is None:
+            return True
+        if not fi.transfer_fails(key, self._clock):
+            if demand:
+                self._note_transfer_ok()
+            return True
+        self.stats.link_failures += 1
+        if not demand:
+            return False
+        for attempt in range(self.retry_max):
+            self.stats.retries += 1
+            if self.retry_backoff_s > 0.0:
+                time.sleep(self.retry_backoff_s * (2.0 ** attempt))
+            if not fi.transfer_fails(key, self._clock):
+                self._note_transfer_ok()
+                return True
+            self.stats.link_failures += 1
+        self._enter_degraded()
+        return False
+
+    def _note_transfer_ok(self) -> None:
+        self._fault_ok_streak += 1
+        if self._degraded \
+                and self._fault_ok_streak >= self.degraded_recover_streak:
+            # hysteresis: N consecutive clean demand transfers before
+            # leaving degraded routing (at route_bias 0 this also returns
+            # decode to the exact pre-bias jit traces — bit-exact recovery)
+            self._degraded = False
+
+    def _enter_degraded(self) -> None:
+        self._fault_ok_streak = 0
+        self._degraded = True
+
+    def _fault_step_end(self, step_s: float) -> None:
+        """Watchdog + degraded-step accounting at the end of one decode
+        step. Inert when neither faults nor a watchdog are configured."""
+        if self.watchdog is not None:
+            self.watchdog.observe(step_s)
+        if self._degraded or (self.watchdog is not None
+                              and self.watchdog.tripped):
+            self.stats.degraded_steps += 1
+
     # -- residency ----------------------------------------------------------
     def ensure_resident(self, li: int, experts, *,
                         speculative: bool = False) -> int:
@@ -861,7 +961,16 @@ class SlotBufferEngine:
                     self.would_stall += 1
                     self.stats.demand_misses += 1
                     self.controller.record_stall()
+                    if not self._fault_transfer_ok(key, demand=True):
+                        # retries exhausted: the expert stays non-resident
+                        # this step — its tokens drop via the dead sentinel
+                        # slot (exactly the capacity-overflow semantics
+                        # below) and degraded routing engages. A dead link
+                        # can never deadlock a decode step.
+                        continue
                     self.prefetcher.demand(key, self._clock)
+                elif not self._fault_transfer_ok(key, demand=False):
+                    continue
                 try:
                     victim = self.cache.insert(key)
                 except RuntimeError:     # every resident expert is needed NOW
@@ -956,6 +1065,8 @@ class SlotBufferEngine:
                     key = (li, int(e))
                     if key in self.cache:
                         continue
+                    if not self._fault_transfer_ok(key, demand=False):
+                        continue     # failed speculative fill: skip the key
                     if self.cache.free_slots <= 0 and not any(
                             k not in self.cache.pinned
                             for k in self.cache.low):
@@ -1371,8 +1482,10 @@ class SlotBufferEngine:
             return self._decode_step_superkernel(tok, state)
         # cache-aware routing is gated on the CEILING, not the live strength:
         # an adaptive engine at strength 0 keeps using the biased traces
-        # (with a zero bias) so ramping costs no recompiles mid-serve
-        ca = self.route_bias > 0.0
+        # (with a zero bias) so ramping costs no recompiles mid-serve.
+        # Degraded mode (link faults) engages the same biased traces at the
+        # capped degraded delta — one recompile the first time, none after.
+        ca = self.route_bias > 0.0 or self._degraded
         batched = state.batched
         if batched:
             act = np.asarray(state.active, bool)
@@ -1536,8 +1649,9 @@ class SlotBufferEngine:
         self.cache.protect_early_layers(
             max(1, min(self._s_eff(), len(self.moe_layer_ids))))
         logits = self._dispatch(self._logits_fn(), self.params, x)
-        self.controller.update_layer_time(
-            (time.perf_counter() - t0) / max(len(self.specs), 1))
+        step_s = time.perf_counter() - t0
+        self.controller.update_layer_time(step_s / max(len(self.specs), 1))
+        self._fault_step_end(step_s)
         if batched:
             # only occupied slots advance; idle rows hold position so a
             # later prefill_into overwrites a stable garbage row
@@ -1669,7 +1783,7 @@ class SlotBufferEngine:
         known demand set on failure. Per-step dispatches: #segments + 1
         (tail) + pulls — vs ~2 per MoE layer + dense + embed + logits on
         the standard path."""
-        ca = self.route_bias > 0.0
+        ca = self.route_bias > 0.0 or self._degraded
         batched = state.batched
         if batched:
             act = np.asarray(state.active, bool)
@@ -1840,8 +1954,9 @@ class SlotBufferEngine:
                 caches[aj] = new_tc[jj]
         self.cache.protect_early_layers(
             max(1, min(self._s_eff(), len(self.moe_layer_ids))))
-        self.controller.update_layer_time(
-            (time.perf_counter() - t0) / max(len(self.specs), 1))
+        step_s = time.perf_counter() - t0
+        self.controller.update_layer_time(step_s / max(len(self.specs), 1))
+        self._fault_step_end(step_s)
         if batched:
             return logits, DecodeState(
                 caches, clen + active_dev.astype(jnp.int32),

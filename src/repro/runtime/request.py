@@ -32,6 +32,10 @@ class Request:
     # admission-control estimate: predicted distinct experts per MoE layer
     # this request keeps hot (None = scheduler assumes top_k)
     predicted_ws: Optional[float] = None
+    # SLO deadline relative to arrival: a request still QUEUED past
+    # arrival_s + deadline_s is shed at admission instead of served late
+    # (None = never shed). Admitted requests always run to completion.
+    deadline_s: Optional[float] = None
     # filled by the engine / scheduler
     output: List[int] = field(default_factory=list)
     admitted_s: float = -1.0                 # left the queue, slot assigned

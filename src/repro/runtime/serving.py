@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.core.metrics import (RunReport, ServingReport, StepMetrics,
                                 request_metrics)
+from repro.distributed.fault_tolerance import StragglerPolicy
 from repro.runtime.batching import ContinuousBatcher, WorkingSetAdmission
 from repro.runtime.engine import SlotBufferEngine
 from repro.runtime.request import Request
@@ -83,6 +84,21 @@ class EngineServingConfig:
     # StepSizeController ramps within from its stall/overfetch thresholds.
     route_bias: Optional[float] = None
     route_bias_adaptive: Optional[bool] = None
+    # graceful degradation / SLO knobs. `deadline_s` is the default
+    # per-request deadline (relative to arrival): a request still queued
+    # past it is shed at admission instead of served uselessly late
+    # (requests carrying their own `deadline_s` keep it; None = never shed).
+    deadline_s: Optional[float] = None
+    # brownout admission: the single-replica StragglerPolicy drains when
+    # the decode-step EWMA blows past threshold x its healthy baseline;
+    # while draining (or while the engine is fault-degraded / its watchdog
+    # tripped) admissions pause — but the queue head still admits into an
+    # EMPTY batch, so nobody starves. None = auto: enabled iff the engine
+    # was built with a FaultPlan. The SAME StragglerPolicy drain signal is
+    # the multi-replica mitigation path (distributed.fault_tolerance).
+    brownout_admission: Optional[bool] = None
+    brownout_threshold: float = 4.0
+    brownout_recovery: float = 1.5
 
 
 class ServingEngine:
@@ -107,8 +123,15 @@ class ServingEngine:
                 expert_bytes=engine._expert_nbytes,
                 default_ws=float(engine.cfg.moe.top_k),
                 headroom=self.cfg.admission_headroom)
-        self.batcher = ContinuousBatcher(self.cfg.max_batch,
-                                         admission=admission)
+        self.straggler = StragglerPolicy(
+            1, threshold=self.cfg.brownout_threshold,
+            recovery=self.cfg.brownout_recovery)
+        brown = self.cfg.brownout_admission
+        if brown is None:
+            brown = engine.faults is not None
+        self.batcher = ContinuousBatcher(
+            self.cfg.max_batch, admission=admission,
+            brownout=self._browned_out if brown else None)
         self.base_key = key if key is not None else jax.random.PRNGKey(17)
         self.logits_trace: Dict[int, List[np.ndarray]] = {}
         # per-slot decode-time sampling state
@@ -119,6 +142,14 @@ class ServingEngine:
         self._prefills: List = []
         self._chunked = (self.cfg.prefill_chunk > 0
                          and engine.chunked_prefill_supported)
+
+    def _browned_out(self) -> bool:
+        """Admission brownout signal: the straggler policy's drain verdict
+        on this (single) replica, OR the engine's own degraded state —
+        fault-degraded routing or a tripped step watchdog."""
+        eng = self.engine
+        return (self.straggler.draining(0) or eng._degraded
+                or (eng.watchdog is not None and eng.watchdog.tripped))
 
     # -- admission-control working-set estimate -----------------------------
     def _ws_bucket(self, n: int) -> int:
@@ -260,9 +291,17 @@ class ServingEngine:
                     f"request {r.request_id}: prompt {r.prompt_len} + "
                     f"max_new {r.max_new_tokens} exceeds engine "
                     f"max_seq {eng.max_seq}; it would fail mid-decode")
+        if cfg.deadline_s is not None:
+            for r in pending:
+                if r.deadline_s is None:
+                    r.deadline_s = cfg.deadline_s
         for r in pending:
             if self.batcher.admission is not None and r.predicted_ws is None:
                 r.predicted_ws = self.predict_working_set(r)
+        # health counters are cumulative on the engine: diff around this run
+        failures0 = eng.stats.link_failures
+        retries0 = eng.stats.retries
+        degraded0 = eng.stats.degraded_steps
         self._t0 = time.perf_counter()
         it = 0
 
@@ -365,7 +404,13 @@ class ServingEngine:
             sm.n_hits = eng.stats.prefetch_hits - hits0
             sm.n_prefetched = eng.stats.prefetched - pf0
             report.run.add(sm)
+            # feed the brownout detector with real decode-step wall time
+            self.straggler.record(0, sm.compute_s)
 
         report.makespan_s = now()
         report.mean_occupancy = self.batcher.stats.mean_occupancy
+        report.n_link_failures = eng.stats.link_failures - failures0
+        report.n_retries = eng.stats.retries - retries0
+        report.n_degraded_steps = eng.stats.degraded_steps - degraded0
+        report.n_shed = self.batcher.stats.shed
         return report

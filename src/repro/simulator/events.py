@@ -97,6 +97,25 @@ class SimCore:
             cfg=policy.step_cfg, s=policy.fixed_s,
             bandwidth_est=hw.host_bw, layer_time_est=spec.layer_time_s)
         self.prefetched_unused: Set[Key] = set()
+        # fault injection (core.faults), mirrored from the live engine via
+        # set_faults(); None = fault-free, every code path unchanged
+        self.faults = None
+        self.retry_max = 0
+        self.retry_backoff_s = 0.0
+        self.n_demand_failures = 0    # demand transfers that failed for good
+
+    def set_faults(self, injector, retry_max: int = 3,
+                   retry_backoff_s: float = 0.0) -> None:
+        """Mirror the engine's FaultPlan semantics in the timing model:
+        brownout/jitter/stalls shape modeled transfer durations via the
+        link hooks, transfer failures are drawn at modeled completion time
+        inside `Prefetcher.demand`/`advance`, and predictor blackout
+        windows suppress prefetch issue."""
+        self.faults = injector
+        self.retry_max = int(retry_max)
+        self.retry_backoff_s = float(retry_backoff_s)
+        injector.attach_link(self.link)
+        self.pf.injector = injector
 
     @property
     def s(self) -> int:
@@ -155,11 +174,25 @@ class SimCore:
 
         # resolve misses: cold demands go at top priority (§3.4)
         ready_t = now
+        failed: Set[Key] = set()
         for key in missing_cold + missing_inflight:
-            t_done = self.pf.demand(key, now)
+            t_done = self.pf.demand(key, now, max_retries=self.retry_max,
+                                    backoff_s=self.retry_backoff_s)
+            if t_done is None:
+                # permanent transfer failure (fault injection): the layer
+                # runs without the expert — its tokens drop, mirroring the
+                # live engine's dead-sentinel degradation — instead of
+                # waiting on a link that will never deliver
+                self.n_demand_failures += 1
+                failed.add(key)
+                continue
             ready_t = max(ready_t, t_done)
             self.insert(key, sm)
+        # failed keys stay in `missing` (they are NOT resident — their
+        # tokens drop) but don't gate compute start: nothing waits on a
+        # transfer that will never land
         missing = set(missing_cold) | set(missing_inflight)
+        waited = missing - failed
 
         # schedule layer compute
         if self.policy.cache_aware and missing:
@@ -168,7 +201,7 @@ class SimCore:
             finish, exposed = overlap_schedule(split, lt, ready_t, now)
         else:
             finish, exposed = sequential_schedule(
-                lt, ready_t if missing else now, now)
+                lt, ready_t if waited else now, now)
         # attribute exposed stall: in-flight -> waiting, cold -> miss
         if exposed > 0:
             if missing_cold:
@@ -192,6 +225,8 @@ class SimCore:
             self.cache.protect_early_layers(self.s if s is None else s)
 
     def issue_prefetches(self, pkeys: Iterable[Key], now: float) -> None:
+        if self.faults is not None and self.faults.predictor_blackout(now):
+            return        # predictor signal dark: nothing to speculate on
         for key in pkeys:
             if key not in self.cache:
                 self.pf.prefetch(key, now)

@@ -31,10 +31,12 @@ import numpy as np
 
 from repro.core.cache_aware import bias_reroute
 from repro.core.coordinator import Policy, PredictionSource
+from repro.core.faults import FaultInjector, FaultPlan
 from repro.core.metrics import (RunReport, ServingReport, StepMetrics,
                                 request_metrics)
 from repro.core.predictor import ForestPredictor
 from repro.core.step_size import token_diversity
+from repro.distributed.fault_tolerance import StragglerPolicy
 from repro.runtime.batching import ContinuousBatcher, WorkingSetAdmission
 from repro.runtime.request import Request
 from repro.simulator.events import SimCore, SimSpec, StepTrace, _distinct
@@ -112,6 +114,24 @@ class ServingConfig:
     # only ever defers admissions; `headroom` scales the budget.
     admission_cap: bool = True
     admission_headroom: float = 1.0
+    # fault injection (core.faults.FaultPlan), mirroring the live engine's
+    # semantics in the timing model: brownout/jitter/stalls shape transfer
+    # durations, transfer failures get bounded retry-with-backoff then
+    # degrade (tokens of a permanently-missing expert drop), predictor
+    # blackout suppresses prefetch. None (or a disabled plan) changes
+    # nothing. Windows are in modeled seconds.
+    fault_plan: Optional["FaultPlan"] = None
+    retry_max: int = 3
+    retry_backoff_s: float = 0.0
+    # default per-request deadline (relative to arrival): still-queued
+    # requests past it are shed at admission (None = never shed)
+    deadline_s: Optional[float] = None
+    # brownout admission via the single-replica StragglerPolicy drain
+    # signal fed with modeled iteration latency (None = auto: on iff a
+    # fault plan is configured)
+    brownout_admission: Optional[bool] = None
+    brownout_threshold: float = 4.0
+    brownout_recovery: float = 1.5
 
 
 def _token_table(assign: np.ndarray) -> np.ndarray:
@@ -182,7 +202,18 @@ def simulate_serving(workload: ServingWorkload, spec: SimSpec,
             expert_bytes=spec.expert_bytes,
             default_ws=float(workload.top_k),
             headroom=cfg.admission_headroom)
-    batcher = ContinuousBatcher(cfg.max_batch, admission=admission)
+    injector = None
+    if cfg.fault_plan is not None and cfg.fault_plan.enabled:
+        injector = FaultInjector(cfg.fault_plan)
+        core.set_faults(injector, cfg.retry_max, cfg.retry_backoff_s)
+    straggler = StragglerPolicy(1, threshold=cfg.brownout_threshold,
+                                recovery=cfg.brownout_recovery)
+    brown = cfg.brownout_admission
+    if brown is None:
+        brown = injector is not None
+    batcher = ContinuousBatcher(
+        cfg.max_batch, admission=admission,
+        brownout=(lambda: straggler.draining(0)) if brown else None)
     report = ServingReport(
         run=RunReport(policy=policy.name, platform=hw.name,
                       model=workload.model),
@@ -196,10 +227,13 @@ def simulate_serving(workload: ServingWorkload, spec: SimSpec,
         r.history = np.zeros((L, M), np.float64)
         if admission is not None and r.predicted_ws is None:
             r.predicted_ws = r.mean_distinct_experts
+        if cfg.deadline_s is not None and r.deadline_s is None:
+            r.deadline_s = cfg.deadline_s
 
     now = 0.0
     it = 0
     s_initialized = False
+    n_degraded_steps = 0
 
     def finish(r: ServingRequest, t: float) -> None:
         r.finish_s = t
@@ -267,6 +301,7 @@ def simulate_serving(workload: ServingWorkload, spec: SimSpec,
         it += 1
         s = core.s
         sm.step_size = s
+        fail0 = core.n_demand_failures
         for r in active:
             r.step_idx += 1
             r.predicted, r.predicted_next = r.predicted_next, {}
@@ -344,6 +379,12 @@ def simulate_serving(workload: ServingWorkload, spec: SimSpec,
                     r.history[li, e] = 1.0
 
         sm.n_prefetched = core.pf.n_prefetches
+        # degraded iteration: a demand transfer failed for good this step
+        # (tokens dropped), or admission is browned out on modeled latency —
+        # same definition shape as the engine's degraded_steps counter
+        if core.n_demand_failures > fail0 or straggler.draining(0):
+            n_degraded_steps += 1
+        straggler.record(0, sm.total_s)
         report.run.add(sm)
 
         for r in batcher.step({r.slot: 0 for r in active}):
@@ -351,4 +392,8 @@ def simulate_serving(workload: ServingWorkload, spec: SimSpec,
 
     report.makespan_s = now
     report.mean_occupancy = batcher.stats.mean_occupancy
+    report.n_link_failures = core.pf.n_failed + core.pf.link.n_failed
+    report.n_retries = core.pf.n_retries
+    report.n_degraded_steps = n_degraded_steps
+    report.n_shed = batcher.stats.shed
     return report

@@ -1,0 +1,502 @@
+"""Fault injection + graceful degradation tests.
+
+Covers the whole degradation ladder — retry with backoff, resident-only
+degraded routing (bounded-KL), speculative-horizon collapse, brownout
+admission, deadline shedding — plus the deterministic fault-plan machinery
+(`core.faults`), the single-replica `StragglerPolicy` brownout signal, the
+simulator mirror, and (slow lane) engine end-to-end behavior under a total
+link outage including bit-exact recovery.
+"""
+import numpy as np
+import pytest
+
+from repro.core.cache_aware import residency_logit_bias
+from repro.core.faults import (FOREVER, FaultInjector, FaultPlan,
+                               StepWatchdog)
+from repro.distributed.fault_tolerance import StragglerPolicy
+from repro.runtime.batching import ContinuousBatcher
+from repro.runtime.request import Request
+
+MS = 1e-3
+
+
+# ----------------------------------------------------------------- FaultPlan
+def test_default_plan_is_disabled_and_presets_are_not():
+    assert not FaultPlan().enabled
+    assert not FaultPlan.none().enabled
+    for preset in ("flaky", "brownout", "stall", "outage"):
+        assert FaultPlan.from_arg(preset).enabled, preset
+
+
+def test_from_arg_parses_presets_json_file_and_rejects_junk(tmp_path):
+    assert FaultPlan.from_arg(None) is None
+    assert FaultPlan.from_arg("") is None
+    assert FaultPlan.from_arg("none") == FaultPlan()
+    inline = FaultPlan.from_arg('{"fail_prob": 0.5, "seed": 3}')
+    assert inline.fail_prob == 0.5 and inline.seed == 3
+    f = tmp_path / "plan.json"
+    f.write_text(FaultPlan.stall(seed=9).to_json())
+    assert FaultPlan.from_arg(str(f)) == FaultPlan.stall(seed=9)
+    with pytest.raises(ValueError):
+        FaultPlan.from_arg("nonsense-preset")
+
+
+def test_json_roundtrip_restores_window_tuples():
+    plan = FaultPlan(seed=4, fail_prob=0.2,
+                     brownout=((0.0, 1.0, 0.1), (2.0, 3.0, 0.5)),
+                     outage=((5.0, 6.0),),
+                     predictor_blackout=((0.0, FOREVER),))
+    back = FaultPlan.from_json(plan.to_json())
+    assert back == plan
+    assert isinstance(back.brownout[0], tuple)
+
+
+# -------------------------------------------------------------- FaultInjector
+def test_injector_draws_are_order_independent():
+    """Same plan, different call order -> identical per-(key, attempt)
+    outcomes: the property that keeps engine (issue-time draws) and
+    simulator (completion-time draws) consistent."""
+    plan = FaultPlan(seed=11, fail_prob=0.5)
+    keys = [(li, e) for li in range(3) for e in range(4)]
+    a, b = FaultInjector(plan), FaultInjector(plan)
+    out_a = {k: a.transfer_fails(k, 0.0) for k in keys}
+    out_b = {k: b.transfer_fails(k, 0.0) for k in reversed(keys)}
+    assert out_a == out_b
+
+
+def test_injector_attempts_get_fresh_draws():
+    """Retries must not be doomed to repeat the first draw."""
+    plan = FaultPlan(seed=0, fail_prob=0.5)
+    inj = FaultInjector(plan)
+    outcomes = [inj.transfer_fails((0, 1), 0.0) for _ in range(32)]
+    assert True in outcomes and False in outcomes
+
+
+def test_outage_window_forces_failure_only_inside():
+    inj = FaultInjector(FaultPlan(outage=((1.0, 2.0),)))
+    assert not inj.transfer_fails((0, 0), 0.5)
+    assert inj.transfer_fails((0, 0), 1.5)
+    assert not inj.transfer_fails((0, 0), 2.5)
+    assert inj.n_failures == 1
+
+
+def test_bandwidth_factor_stacks_brownout_windows_and_jitter():
+    inj = FaultInjector(FaultPlan(bandwidth_factor=0.5,
+                                  brownout=((1.0, 2.0, 0.1),)))
+    assert inj.bandwidth_factor((0, 0), 0.0) == pytest.approx(0.5)
+    assert inj.bandwidth_factor((0, 0), 1.5) == pytest.approx(0.05)
+    jit = FaultInjector(FaultPlan(jitter=0.3))
+    for _ in range(16):
+        f = jit.bandwidth_factor((0, 0), 0.0)
+        assert 0.7 - 1e-9 <= f <= 1.0 + 1e-9
+
+
+def test_stall_draw_adds_configured_latency():
+    inj = FaultInjector(FaultPlan(seed=1, stall_prob=1.0, stall_s=2.5))
+    assert inj.transfer_extra_s((0, 0), 0.0) == 2.5
+    none = FaultInjector(FaultPlan(seed=1, stall_prob=0.0, stall_s=2.5))
+    assert none.transfer_extra_s((0, 0), 0.0) == 0.0
+
+
+def test_predictor_blackout_and_link_degraded_windows():
+    inj = FaultInjector(FaultPlan(predictor_blackout=((3.0, 4.0),),
+                                  brownout=((0.0, 1.0, 0.1),)))
+    assert inj.predictor_blackout(3.5) and not inj.predictor_blackout(2.0)
+    assert inj.link_degraded(0.5)          # 0.1x bandwidth
+    assert not inj.link_degraded(1.5)      # window over
+    assert FaultInjector(
+        FaultPlan(outage=((0.0, FOREVER),))).link_degraded(1e6)
+
+
+# --------------------------------------------------------------- StepWatchdog
+def test_watchdog_trips_on_blowout_and_recovers_with_hysteresis():
+    wd = StepWatchdog(alpha=0.5, trip_factor=4.0, recover_factor=1.5,
+                      recover_steps=3, warmup=2)
+    for _ in range(4):
+        assert not wd.observe(1.0)
+    assert wd.observe(10.0)               # 10x the EWMA: trip
+    assert wd.tripped and wd.n_trips == 1
+    # two healthy samples are not enough (hysteresis needs 3)
+    assert wd.observe(1.0) and wd.observe(1.0)
+    assert not wd.observe(1.0)            # third: untripped
+    assert not wd.tripped
+
+
+def test_watchdog_borderline_sample_resets_recovery_streak():
+    wd = StepWatchdog(alpha=0.5, trip_factor=4.0, recover_factor=1.5,
+                      recover_steps=2, warmup=1)
+    wd.observe(1.0)
+    wd.observe(1.0)
+    assert wd.observe(20.0)
+    assert wd.observe(1.0)                # streak 1
+    assert wd.observe(5.0)                # blown again: streak resets
+    assert wd.observe(1.0)                # streak 1
+    assert not wd.observe(1.0)            # streak 2: recovered
+
+
+def test_watchdog_never_normalizes_the_brownout_into_its_baseline():
+    """A sustained blowout must not drag the EWMA up (tripped samples are
+    excluded), so recovery is judged against the HEALTHY baseline."""
+    wd = StepWatchdog(alpha=0.5, warmup=1, recover_steps=1)
+    wd.observe(1.0)
+    wd.observe(1.0)
+    ewma0 = wd.ewma_s
+    wd.observe(50.0)                      # trip
+    for _ in range(10):
+        wd.observe(50.0)                  # sustained brownout
+    assert wd.tripped
+    assert wd.ewma_s == ewma0             # baseline untouched
+    assert not wd.observe(1.0)            # healthy again -> recovers
+
+
+def test_watchdog_no_trip_during_warmup():
+    wd = StepWatchdog(warmup=3)
+    assert not wd.observe(1.0)
+    assert not wd.observe(100.0)          # compile-step spike: ignored
+    assert not wd.observe(1.0)
+    assert wd.n_trips == 0
+
+
+# ----------------------------------------------- StragglerPolicy (satellite)
+def test_straggler_single_replica_drain_and_recover_cycle():
+    """The 1-replica brownout signal: EWMA blowup vs the slow healthy
+    baseline drains; sustained recovery un-drains."""
+    pol = StragglerPolicy(1, threshold=3.0, alpha=0.5, recovery=1.5)
+    pol.record(0, 10.0)                   # warmup (compile step): ignored
+    for _ in range(8):
+        pol.record(0, 1.0)
+    assert not pol.draining(0)
+    base = pol.replicas[0].baseline_s
+    assert base == pytest.approx(1.0, rel=0.2)
+    for _ in range(6):
+        pol.record(0, 20.0)               # brownout
+    assert pol.draining(0)
+    # baseline FROZEN while draining: the brownout must not become normal
+    assert pol.replicas[0].baseline_s == pytest.approx(base)
+    for _ in range(12):
+        pol.record(0, 1.0)
+    assert not pol.draining(0)
+
+
+def test_straggler_multi_replica_median_semantics_preserved():
+    pol = StragglerPolicy(3, threshold=2.0, alpha=1.0)
+    for rep in range(3):
+        pol.record(rep, 1.0)
+        pol.record(rep, 1.0)
+    for _ in range(4):
+        pol.record(0, 1.0)
+        pol.record(1, 1.0)
+        pol.record(2, 10.0)               # straggler vs fleet median
+    assert pol.healthy_replicas() == [0, 1]
+    assert pol.draining(2) and not pol.draining(0)
+    # pick() routes around the draining replica
+    assert set(pol.pick(s) for s in range(4)) == {0, 1}
+
+
+def test_straggler_warmup_skips_compile_spike():
+    pol = StragglerPolicy(1, threshold=2.0, alpha=1.0, warmup=2)
+    pol.record(0, 100.0)
+    pol.record(0, 100.0)
+    pol.record(0, 1.0)
+    assert not pol.draining(0)
+    assert pol.replicas[0].baseline_s == pytest.approx(1.0)
+
+
+# ------------------------------------------------- degraded-routing KL bound
+@pytest.mark.parametrize("seed", range(8))
+def test_degraded_bias_respects_kl_bound_at_ceiling(seed):
+    """The degraded-mode perturbation is the SAME one-sided bias as
+    cache-aware routing at delta = degraded_route_bias, so the router KL
+    bound KL(p || p_biased) <= delta nats holds at the degraded ceiling."""
+    rng = np.random.default_rng(seed)
+    delta = 4.0                            # engine default ceiling
+    logits = rng.normal(0.0, 3.0, size=64)
+    mask = rng.random(64) < 0.4
+    if not mask.any():
+        mask[0] = True
+    bias = residency_logit_bias(mask, delta)
+    assert np.all(bias[mask] == 0.0)
+    assert np.all(bias[~mask] == -np.float32(delta))
+
+    def log_softmax(x):
+        x = x - x.max()
+        return x - np.log(np.exp(x).sum())
+
+    lp = log_softmax(logits.astype(np.float64))
+    lq = log_softmax(logits.astype(np.float64) + np.asarray(bias, np.float64))
+    kl = float(np.sum(np.exp(lp) * (lp - lq)))
+    assert 0.0 <= kl <= delta + 1e-9
+
+
+# ----------------------------------------------------- batcher shed/brownout
+def _req(rid, arrival=0.0, deadline=None):
+    return Request(prompt=None, prompt_len=8, max_new_tokens=4,
+                   arrival_s=arrival, deadline_s=deadline, request_id=rid)
+
+
+def test_deadline_shed_drops_expired_and_keeps_fifo():
+    b = ContinuousBatcher(2)
+    b.submit(_req(0, arrival=0.0, deadline=1.0))   # expired at now=5
+    b.submit(_req(1, arrival=4.0, deadline=2.0))   # still live
+    b.submit(_req(2, arrival=4.5))                 # no deadline
+    admitted = b.admit(now=5.0)
+    assert [r.request_id for r in admitted] == [1, 2]
+    assert [r.request_id for r in b.shed] == [0]
+    assert b.stats.shed == 1
+    assert b.shed[0].slot == -1
+
+
+def test_brownout_pauses_admission_but_empty_batch_always_admits():
+    state = {"degraded": True}
+    b = ContinuousBatcher(2, brownout=lambda: state["degraded"])
+    b.submit(_req(0))
+    b.submit(_req(1))
+    # empty batch: the head admits even while degraded (no starvation)
+    admitted = b.admit(now=0.0)
+    assert [r.request_id for r in admitted] == [0]
+    assert b.stats.brownout_deferred == 1
+    # recovery resumes admission
+    state["degraded"] = False
+    assert [r.request_id for r in b.admit(now=0.0)] == [1]
+
+
+def test_shed_still_drains_during_brownout():
+    """Expired work must not pin the queue behind a brownout pause."""
+    b = ContinuousBatcher(2, brownout=lambda: True)
+    b.submit(_req(0))
+    b.admit(now=0.0)                      # occupy a slot
+    b.submit(_req(1, arrival=0.0, deadline=0.5))
+    b.submit(_req(2, arrival=0.0, deadline=0.5))
+    admitted = b.admit(now=2.0)
+    assert admitted == []
+    assert [r.request_id for r in b.shed] == [1, 2]
+    assert b.stats.shed == 2
+
+
+def test_no_deadline_means_never_shed():
+    b = ContinuousBatcher(1)
+    b.submit(_req(0, arrival=0.0))
+    b.admit(now=0.0)
+    b.submit(_req(1, arrival=0.0))        # queued forever, no deadline
+    b.admit(now=1e9)
+    assert b.stats.shed == 0 and len(b.waiting) == 1
+
+
+# ----------------------------------------------------------- simulator mirror
+def _sim_requests(n, n_new, L=2, M=8, top_k=2, arrival_gap=0.0):
+    from repro.simulator.events import StepTrace
+    from repro.simulator.serving import ServingRequest
+    reqs = []
+    for rid in range(n):
+        steps = []
+        for si in range(n_new):
+            assigns = [np.array([[(rid + si + li + j) % M]
+                                 for j in range(top_k)])
+                       for li in range(L)]
+            steps.append(StepTrace(si, np.arange(4), assigns,
+                                   np.zeros((L, 4), np.float32)))
+        reqs.append(ServingRequest(prompt_len=16, max_new_tokens=n_new,
+                                   steps=steps, arrival_s=rid * arrival_gap,
+                                   request_id=rid))
+    return reqs
+
+
+def _sim_serve(plan=None, deadline_s=None, max_batch=4, arrival_gap=0.0,
+               n=6, n_new=10):
+    from repro.core.coordinator import ablation
+    from repro.simulator.events import SimSpec
+    from repro.simulator.hardware import HardwareSpec
+    from repro.simulator.serving import (ServingConfig, ServingWorkload,
+                                         simulate_serving)
+    L, M, top_k = 2, 8, 2
+    reqs = _sim_requests(n, n_new, L, M, top_k, arrival_gap)
+    wl = ServingWorkload(L, M, top_k,
+                         [np.zeros((4, M), np.float32) for _ in range(L)],
+                         reqs, name="faults")
+    hw = HardwareSpec("faultlane", host_bw=1e8, flops=1e15, hbm_bw=1e12,
+                      mem_cap=1e9)
+    spec = SimSpec(expert_bytes=1e5, layer_time_s=1 * MS, capacity_experts=6)
+    pol = ablation("faults", prefetch=True, adaptive_s=False,
+                   two_level_lru=False, cache_aware=False,
+                   blocking_swap_out=False, protect_early_layers=False)
+    cfg = ServingConfig(max_batch=max_batch, prefill_chunk=16,
+                        admission_cap=False, fault_plan=plan, retry_max=3,
+                        deadline_s=deadline_s)
+    return simulate_serving(wl, spec, hw, pol, cfg=cfg)
+
+
+def test_sim_disabled_plan_is_a_noop():
+    a = _sim_serve(plan=None).summary()
+    b = _sim_serve(plan=FaultPlan()).summary()
+    assert a == b
+
+
+def test_sim_brownout_completes_with_health_counters():
+    rep = _sim_serve(plan=FaultPlan.brownout_preset(seed=0))
+    assert all(m.n_tokens == 10 for m in rep.requests)
+    assert rep.n_link_failures > 0
+    assert rep.n_retries > 0
+    assert rep.n_degraded_steps > 0
+    assert rep.n_shed == 0
+    # the health keys are part of the shared summary surface
+    s = rep.summary()
+    for k in ("n_link_failures", "n_retries", "n_degraded_steps", "n_shed"):
+        assert k in s
+
+
+def test_sim_total_outage_still_serves_every_request():
+    """Dead link forever: tokens of permanently-missing experts drop, but
+    every request still finishes its budget — no deadlock, no hang."""
+    rep = _sim_serve(plan=FaultPlan.total_outage())
+    assert all(m.n_tokens == 10 for m in rep.requests)
+    assert rep.n_degraded_steps > 0
+
+
+def test_sim_tight_deadline_sheds_late_arrivals():
+    rep = _sim_serve(plan=None, deadline_s=4 * MS, max_batch=1,
+                     arrival_gap=0.1 * MS)
+    assert rep.n_shed > 0
+    assert len(rep.requests) + rep.n_shed == 6
+    # everyone actually served met their full budget
+    assert all(m.n_tokens == 10 for m in rep.requests)
+
+
+def test_sim_predictor_blackout_suppresses_prefetch():
+    healthy = _sim_serve(plan=FaultPlan(bandwidth_factor=0.999999))
+    blackout = _sim_serve(plan=FaultPlan(
+        bandwidth_factor=0.999999,
+        predictor_blackout=((0.0, FOREVER),)))
+    p_h = sum(sm.n_prefetched for sm in healthy.run.steps)
+    p_b = sum(sm.n_prefetched for sm in blackout.run.steps)
+    assert p_h > 0                        # the policy does prefetch...
+    assert p_b == 0                       # ...until the predictor goes dark
+
+
+# -------------------------------------------------- engine e2e (slow lane)
+@pytest.fixture(scope="module")
+def tiny():
+    from repro.configs.base import reduce_config
+    from repro.configs.registry import get_config
+    from repro.runtime.engine import Engine
+    cfg = reduce_config(get_config("olmoe-1b-7b"), layers=2, d_model=32,
+                        heads=2, kv_heads=2, d_ff=64, vocab=128, experts=4,
+                        top_k=2, d_expert=16)
+    return cfg, Engine(cfg, max_seq=64)
+
+
+def _engine_serve(cfg, eng, plan, slots, reqs, trace=False, **eng_kw):
+    from repro.runtime.engine import SlotBufferEngine
+    from repro.runtime.serving import EngineServingConfig, ServingEngine
+    sb = SlotBufferEngine(cfg, eng.params, eng.model, n_slots_per_layer=slots,
+                          max_seq=64, faults=plan, retry_backoff_s=0.0,
+                          **eng_kw)
+    srv = ServingEngine(sb, EngineServingConfig(
+        max_batch=2, prefill_chunk=0, admission_cap=False,
+        trace_logits=trace))
+    rep = srv.serve(reqs)
+    return sb, srv, rep
+
+
+def _prompts(cfg, n, rng):
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, 16,
+                                        dtype=np.int32),
+                    max_new_tokens=6, temperature=0.0, request_id=i)
+            for i in range(n)]
+
+
+@pytest.mark.slow
+def test_engine_total_outage_decode_still_emits_tokens(tiny):
+    """The no-deadlock guarantee: with the link dead from t=0, every
+    request still emits its full token budget (resident-only routing;
+    missing experts' tokens drop through the dead slot) and the run
+    reports degraded steps."""
+    cfg, eng = tiny
+    reqs = _prompts(cfg, 3, np.random.default_rng(0))
+    sb, _, rep = _engine_serve(cfg, eng, FaultPlan.total_outage(), 3, reqs)
+    assert all(len(r.output) == r.max_new_tokens for r in reqs)
+    assert rep.n_link_failures > 0
+    assert rep.n_degraded_steps > 0
+    assert sb._degraded                    # still degraded: link never healed
+    # degraded routing engages the cache-aware bias at the capped delta
+    assert sb._route_bias_strength() == sb.degraded_route_bias
+
+
+@pytest.mark.slow
+def test_engine_watchdog_and_blackout_collapse_horizon(tiny):
+    cfg, eng = tiny
+    from repro.runtime.engine import SlotBufferEngine
+    sb = SlotBufferEngine(cfg, eng.params, eng.model, n_slots_per_layer=3,
+                          max_seq=64, faults=FaultPlan.flaky(seed=0))
+    assert sb.watchdog is not None
+    h0 = sb._horizon(0)
+    sb.watchdog.tripped = True
+    assert sb._horizon(0) == 0
+    sb.watchdog.tripped = False
+    assert sb._horizon(0) == h0
+    sb2 = SlotBufferEngine(cfg, eng.params, eng.model, n_slots_per_layer=3,
+                           max_seq=64,
+                           faults=FaultPlan(
+                               predictor_blackout=((0.0, FOREVER),)))
+    assert sb2._horizon(0) == 0
+
+
+@pytest.mark.slow
+def test_engine_recovery_restores_bit_exactness(tiny):
+    """Outage window ends -> degraded mode clears (streak hysteresis) ->
+    with route_bias back at 0 the engine re-selects the exact pre-bias jit
+    traces: a post-recovery request is BIT-identical to one served by an
+    engine that never saw a fault."""
+    cfg, eng = tiny
+    rng = np.random.default_rng(1)
+    E = cfg.moe.num_experts
+    plan = FaultPlan(outage=((0.0, 2.0),))
+    # uncontended slots: residency cannot perturb outputs post-recovery
+    sb, srv_a, rep_a = _engine_serve(
+        cfg, eng, plan, E, _prompts(cfg, 2, rng), trace=True,
+        degraded_recover_streak=1)
+    assert rep_a.n_link_failures > 0       # outage bit during early clock
+    assert not sb._degraded                # recovered: clean demand landed
+    assert sb._clock > 2.0                 # precondition: window is over
+    # fresh population, served post-recovery on the SAME faulted engine
+    # vs a never-faulted engine
+    reqs_b = _prompts(cfg, 2, np.random.default_rng(7))
+    from repro.runtime.serving import EngineServingConfig, ServingEngine
+    srv_b = ServingEngine(sb, EngineServingConfig(
+        max_batch=2, prefill_chunk=0, admission_cap=False,
+        trace_logits=True))
+    srv_b.serve(reqs_b)
+    reqs_c = _prompts(cfg, 2, np.random.default_rng(7))
+    _, srv_c, _ = _engine_serve(cfg, eng, None, E, reqs_c, trace=True)
+    assert set(srv_b.logits_trace) == set(srv_c.logits_trace)
+    for rid, rows in srv_c.logits_trace.items():
+        brows = srv_b.logits_trace[rid]
+        assert len(rows) == len(brows)
+        for x, y in zip(rows, brows):
+            assert np.array_equal(x, y)
+
+
+@pytest.mark.slow
+def test_engine_brownout_completes_and_reports_health(tiny):
+    cfg, eng = tiny
+    reqs = _prompts(cfg, 3, np.random.default_rng(2))
+    sb, _, rep = _engine_serve(cfg, eng, FaultPlan.brownout_preset(seed=0),
+                               3, reqs)
+    assert all(len(r.output) == r.max_new_tokens for r in reqs)
+    assert rep.n_retries > 0
+    assert rep.n_link_failures > 0
+    assert rep.n_shed == 0
+
+
+@pytest.mark.slow
+def test_engine_disabled_plan_is_bit_exact(tiny):
+    cfg, eng = tiny
+    _, srv_a, _ = _engine_serve(cfg, eng, FaultPlan(), 3,
+                                _prompts(cfg, 2, np.random.default_rng(3)),
+                                trace=True)
+    _, srv_b, _ = _engine_serve(cfg, eng, None, 3,
+                                _prompts(cfg, 2, np.random.default_rng(3)),
+                                trace=True)
+    assert set(srv_a.logits_trace) == set(srv_b.logits_trace)
+    for rid, rows in srv_a.logits_trace.items():
+        for x, y in zip(rows, srv_b.logits_trace[rid]):
+            assert np.array_equal(x, y)
