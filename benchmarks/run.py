@@ -17,7 +17,8 @@ def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     from benchmarks import (bench_cache_aware, bench_decode, bench_faults,
                             bench_prefill, bench_serving_engine,
-                            bench_slotpath, fig2_step_size, fig3_batch_size,
+                            bench_slotpath, bench_tiers,
+                            fig2_step_size, fig3_batch_size,
                             fig4_diversity, fig7_overall_latency,
                             fig8_predictor_accuracy, fig9_cache_miss,
                             fig10_lru, fig11_cache_aware_routing,
@@ -30,7 +31,7 @@ def main() -> None:
         "serving": fig_serving, "slotpath": bench_slotpath,
         "decode": bench_decode, "serving_engine": bench_serving_engine,
         "prefill": bench_prefill, "cache_aware": bench_cache_aware,
-        "faults": bench_faults,
+        "faults": bench_faults, "tiers": bench_tiers,
         "kernels": kernels_bench, "roofline": roofline,
     }
     csv = Csv()

@@ -1,6 +1,8 @@
 """Dev harness: forward + prefill + decode every smoke config, then a
 fault lane — brownout-plan serving through the simulator mirror must
-complete every request with retries firing (graceful degradation)."""
+complete every request with retries firing (graceful degradation) — and
+a tier lane — serving with a budgeted host staging tier must complete
+every request while reporting disk->host promotion health."""
 import sys
 
 import jax
@@ -94,6 +96,50 @@ def run_fault_lane() -> None:
           f"retries={rep.n_retries} degraded_steps={rep.n_degraded_steps})")
 
 
+def run_tiers_lane() -> None:
+    """Serving through the budgeted host staging tier: every request must
+    finish, host-tier activity must show up, and the new tier health
+    fields must be present in the ServingReport summary."""
+    from repro.core.coordinator import ablation
+    from repro.simulator.events import SimSpec, StepTrace
+    from repro.simulator.hardware import HardwareSpec
+    from repro.simulator.serving import (ServingConfig, ServingRequest,
+                                         ServingWorkload, simulate_serving)
+    L, M, top_k, n_new = 2, 8, 2, 10
+    reqs = []
+    for rid in range(6):
+        steps = []
+        for si in range(n_new):
+            assigns = [np.array([[(rid + si + li + j) % M]
+                                 for j in range(top_k)])
+                       for li in range(L)]
+            steps.append(StepTrace(si, np.arange(4), assigns,
+                                   np.zeros((L, 4), np.float32)))
+        reqs.append(ServingRequest(prompt_len=16, max_new_tokens=n_new,
+                                   steps=steps, request_id=rid))
+    wl = ServingWorkload(L, M, top_k,
+                         [np.zeros((4, M), np.float32) for _ in range(L)],
+                         reqs, name="tiers")
+    hw = HardwareSpec("tierlane", host_bw=1e8, flops=1e15, hbm_bw=1e12,
+                      mem_cap=1e9)
+    spec = SimSpec(expert_bytes=1e5, layer_time_s=1e-3, capacity_experts=6)
+    pol = ablation("tiers", prefetch=True, adaptive_s=False,
+                   two_level_lru=False, cache_aware=False,
+                   blocking_swap_out=False, protect_early_layers=False)
+    rep = simulate_serving(wl, spec, hw, pol, cfg=ServingConfig(
+        max_batch=4, prefill_chunk=16, admission_cap=False,
+        host_budget_frac=0.5, disk_bandwidth=1e9, disk_prefetch=True))
+    s = rep.summary()
+    assert all(m.n_tokens == n_new for m in rep.requests), "request truncated"
+    for k in ("n_host_hits", "n_host_misses", "disk_stall_s"):
+        assert k in s, f"ServingReport summary missing tier field {k}"
+    assert s["n_host_hits"] + s["n_host_misses"] > 0, "host tier never hit"
+    print(f"tiers lane: {len(rep.requests)} requests complete through the "
+          f"host staging tier (host_hits={s['n_host_hits']} "
+          f"host_misses={s['n_host_misses']} "
+          f"disk_stall={s['disk_stall_s'] * 1e3:.3f}ms)")
+
+
 if __name__ == "__main__":
     archs = sys.argv[1:] or ARCH_IDS
     for a in archs:
@@ -104,3 +150,4 @@ if __name__ == "__main__":
             import traceback
             traceback.print_exc()
     run_fault_lane()
+    run_tiers_lane()

@@ -24,12 +24,12 @@ import threading
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
-import ml_dtypes
 import numpy as np
 
 # numpy's savez/astype do not handle ml_dtypes natively — store raw views
-_EXOTIC = {"bfloat16": (ml_dtypes.bfloat16, np.uint16),
-           "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8)}
+# (shared with the expert shard format; see checkpoint/serde.py)
+from repro.checkpoint.serde import EXOTIC as _EXOTIC
+from repro.checkpoint.serde import decode_raw, encode_raw
 
 
 def _flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
@@ -57,9 +57,7 @@ def save_checkpoint(path: str, tree: Any, step: int = 0,
         arr = np.asarray(jax.device_get(leaf))
         name = f"a{i}"
         dtype_name = str(arr.dtype)
-        if dtype_name in _EXOTIC:
-            arr = arr.view(_EXOTIC[dtype_name][1])
-        arrays[name] = arr
+        arrays[name] = encode_raw(arr)
         manifest["leaves"].append({"key": key, "name": name,
                                    "shape": list(arr.shape),
                                    "dtype": dtype_name})
@@ -84,10 +82,7 @@ def load_checkpoint(path: str, like: Any, shardings: Any = None) -> Tuple[Any, i
     with np.load(path / "arrays.npz") as z:
         arrs = []
         for rec in manifest["leaves"]:
-            a = z[rec["name"]]
-            if rec["dtype"] in _EXOTIC:
-                a = a.view(_EXOTIC[rec["dtype"]][0])
-            arrs.append(a)
+            arrs.append(decode_raw(z[rec["name"]], rec["dtype"]))
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
     if len(arrs) != len(leaves_like):
         raise ValueError(

@@ -1,0 +1,43 @@
+"""Exotic-dtype raw-view serialization, shared by every on-disk format.
+
+numpy's own serialization (``savez``, ``memmap``, ``tobytes``) does not
+understand ``ml_dtypes`` scalars: bf16 and f8 arrays must be stored as raw
+integer views of identical item width and viewed back on load. This module
+is the ONE place that mapping lives — both the checkpoint format
+(`checkpoint.checkpointer`) and the expert shard format
+(`core.expert_tiers`) record the ORIGINAL dtype name in their manifest and
+round-trip losslessly (bit-exactly) through these views.
+"""
+from __future__ import annotations
+
+import ml_dtypes
+import numpy as np
+
+# dtype name -> (true dtype, raw storage dtype of identical item width)
+EXOTIC = {"bfloat16": (ml_dtypes.bfloat16, np.uint16),
+          "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8)}
+
+
+def encode_raw(arr: np.ndarray) -> np.ndarray:
+    """View an exotic-dtype array as its raw storage dtype (zero-copy).
+
+    Arrays numpy serializes natively pass through unchanged."""
+    name = str(arr.dtype)
+    if name in EXOTIC:
+        return arr.view(EXOTIC[name][1])
+    return arr
+
+
+def decode_raw(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    """Undo `encode_raw` given the manifest-recorded original dtype name
+    (zero-copy view; pass-through for native dtypes)."""
+    if dtype_name in EXOTIC:
+        return arr.view(EXOTIC[dtype_name][0])
+    return arr
+
+
+def storage_dtype(dtype_name: str) -> np.dtype:
+    """The on-disk dtype for arrays whose true dtype is `dtype_name`."""
+    if dtype_name in EXOTIC:
+        return np.dtype(EXOTIC[dtype_name][1])
+    return np.dtype(dtype_name)

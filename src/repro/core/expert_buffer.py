@@ -100,6 +100,13 @@ class HostExpertStore:
 
     def __init__(self):
         self._layers: Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+        # reusable staging buffers for the multi-layer gather path, keyed
+        # on (padded batch size, per-expert shape/dtype signature): the
+        # prefetch window calls gather_many every horizon refill, and the
+        # old path re-allocated fresh concatenations each time. Returned
+        # views are only valid until the NEXT gather_many call — fine for
+        # swap_in_many, whose jnp.asarray copies to device immediately.
+        self._staging: Dict[tuple, Tuple[np.ndarray, ...]] = {}
 
     def add_layer(self, layer: int, w_gate, w_up, w_down) -> None:
         self._layers[layer] = tuple(
@@ -120,20 +127,44 @@ class HostExpertStore:
         fills across layers l+1..l+S while still issuing ONE batched device
         swap (`swap_in_many`) for the whole window."""
         assert keys, "gather_many needs at least one key"
-        parts = [[], [], []]
+        groups = []
         i = 0
         n = len(keys)
         while i < n:           # group consecutive same-layer keys per slice
             j = i
             while j < n and keys[j][0] == keys[i][0]:
                 j += 1
-            idx = np.asarray([e for _, e in keys[i:j]], np.int32)
-            for t, w in enumerate(self._layers[keys[i][0]]):
-                parts[t].append(w[idx])
+            groups.append((keys[i][0],
+                           np.asarray([e for _, e in keys[i:j]], np.int32)))
             i = j
-        if len(parts[0]) == 1:
-            return parts[0][0], parts[1][0], parts[2][0]
-        return tuple(np.concatenate(p, axis=0) for p in parts)
+        if len(groups) == 1:
+            layer, idx = groups[0]
+            wg, wu, wd = self._layers[layer]
+            return wg[idx], wu[idx], wd[idx]
+        ws0 = self._layers[groups[0][0]]
+        sig = tuple((w.shape[1:], w.dtype.str) for w in ws0)
+        if any(tuple((w.shape[1:], w.dtype.str)
+                     for w in self._layers[layer]) != sig
+               for layer, _ in groups[1:]):
+            # heterogeneous layer shapes: keep the allocating path
+            parts = [[], [], []]
+            for layer, idx in groups:
+                for t, w in enumerate(self._layers[layer]):
+                    parts[t].append(w[idx])
+            return tuple(np.concatenate(p, axis=0) for p in parts)
+        bkey = (_next_pow2(n), sig)
+        bufs = self._staging.get(bkey)
+        if bufs is None:
+            bufs = tuple(np.empty((bkey[0],) + w.shape[1:], w.dtype)
+                         for w in ws0)
+            self._staging[bkey] = bufs
+        pos = 0
+        for layer, idx in groups:   # gather straight into the buffer
+            g = idx.shape[0]
+            for t, w in enumerate(self._layers[layer]):
+                np.take(w, idx, axis=0, out=bufs[t][pos:pos + g])
+            pos += g
+        return tuple(b[:n] for b in bufs)
 
 
 class SlotTable:

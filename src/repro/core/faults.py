@@ -71,13 +71,30 @@ class FaultPlan:
     outage: Tuple[Window, ...] = ()
     # predictor blackout: prefetch/speculation signals unavailable
     predictor_blackout: Tuple[Window, ...] = ()
+    # ---- disk-link scope (the disk->host promotion queue of the tiered
+    # expert store, core.expert_tiers). Same semantics as the device-link
+    # fields above, drawn with independent salts so chaos scenarios
+    # compose: a plan can brown out the PCIe link AND kill the disk.
+    disk_fail_prob: float = 0.0
+    disk_stall_prob: float = 0.0
+    disk_stall_s: float = 0.0
+    disk_jitter: float = 0.0
+    disk_bandwidth_factor: float = 1.0
+    disk_outage: Tuple[Window, ...] = ()
+
+    @property
+    def disk_enabled(self) -> bool:
+        return (self.disk_fail_prob > 0.0 or self.disk_stall_prob > 0.0
+                or self.disk_jitter > 0.0
+                or self.disk_bandwidth_factor != 1.0
+                or bool(self.disk_outage))
 
     @property
     def enabled(self) -> bool:
         return (self.fail_prob > 0.0 or self.stall_prob > 0.0
                 or self.jitter > 0.0 or self.bandwidth_factor != 1.0
                 or bool(self.brownout) or bool(self.outage)
-                or bool(self.predictor_blackout))
+                or bool(self.predictor_blackout) or self.disk_enabled)
 
     # ------------------------------------------------------------ presets
     @classmethod
@@ -109,7 +126,21 @@ class FaultPlan:
         """The link is dead in [start, end): every attempt fails."""
         return cls(outage=((start, end),))
 
-    PRESETS = ("none", "flaky", "brownout", "stall", "outage")
+    @classmethod
+    def disk_flaky(cls, seed: int = 0,
+                   disk_fail_prob: float = 0.3) -> "FaultPlan":
+        """Disk->host promotions randomly fail; retries usually recover."""
+        return cls(seed=seed, disk_fail_prob=disk_fail_prob)
+
+    @classmethod
+    def disk_dead(cls, start: float = 0.0,
+                  end: float = FOREVER) -> "FaultPlan":
+        """The disk link is dead in [start, end): every promotion attempt
+        fails — serving must degrade (drop tokens), never deadlock."""
+        return cls(disk_outage=((start, end),))
+
+    PRESETS = ("none", "flaky", "brownout", "stall", "outage",
+               "disk_flaky", "disk_dead")
 
     @classmethod
     def from_arg(cls, s: Optional[str]) -> Optional["FaultPlan"]:
@@ -127,6 +158,10 @@ class FaultPlan:
             return cls.stall()
         if s == "outage":
             return cls.total_outage()
+        if s == "disk_flaky":
+            return cls.disk_flaky()
+        if s == "disk_dead":
+            return cls.disk_dead()
         if s.lstrip().startswith("{"):
             return cls.from_json(s)
         if os.path.exists(s):
@@ -142,7 +177,8 @@ class FaultPlan:
     @classmethod
     def from_json(cls, s: str) -> "FaultPlan":
         d = json.loads(s)
-        for k in ("brownout", "outage", "predictor_blackout"):
+        for k in ("brownout", "outage", "predictor_blackout",
+                  "disk_outage"):
             if k in d:
                 d[k] = tuple(tuple(w) for w in d[k])
         return cls(**d)
@@ -237,6 +273,76 @@ class FaultInjector:
     def attach_link(self, link) -> None:
         """Install bandwidth/latency hooks on a `TransferLink` so brownout,
         jitter, and stalls shape the modeled transfer durations."""
+        link.bandwidth_hook = lambda tr, t: self.bandwidth_factor(tr.key, t)
+        link.latency_hook = lambda tr, t: self.transfer_extra_s(tr.key, t)
+
+    # --------------------------------------------------------- disk scope
+    # Same machinery as the device link, on salts 3/4/5 so the two links'
+    # draws are independent: one plan can fail a transfer on disk but not
+    # PCIe for the same (key, attempt), and vice versa.
+    def disk_transfer_fails(self, key, now: float) -> bool:
+        attempt = self._next_attempt(3, key)
+        if _in_window(self.plan.disk_outage, now):
+            self.n_failures += 1
+            return True
+        if self.plan.disk_fail_prob > 0.0 \
+                and self._draw(3, key, attempt) < self.plan.disk_fail_prob:
+            self.n_failures += 1
+            return True
+        return False
+
+    def disk_transfer_extra_s(self, key, start: float) -> float:
+        if self.plan.disk_stall_prob <= 0.0 or self.plan.disk_stall_s <= 0.0:
+            return 0.0
+        attempt = self._next_attempt(4, key)
+        if self._draw(4, key, attempt) < self.plan.disk_stall_prob:
+            self.n_stalls += 1
+            return self.plan.disk_stall_s
+        return 0.0
+
+    def disk_bandwidth_factor(self, key, t: float) -> float:
+        f = self.plan.disk_bandwidth_factor
+        if self.plan.disk_jitter > 0.0:
+            attempt = self._next_attempt(5, key)
+            f *= 1.0 - self.plan.disk_jitter * self._draw(5, key, attempt)
+        return max(f, 1e-9)
+
+    def disk_link_degraded(self, t: float) -> bool:
+        return (_in_window(self.plan.disk_outage, t)
+                or self.plan.disk_bandwidth_factor < 0.5)
+
+    def disk_view(self) -> "_DiskFaultView":
+        """Injector facade for the disk link: exposes the standard surface
+        (`transfer_fails`/`attach_link`/...) backed by the disk-scope
+        fields, so `Prefetcher`'s retry machinery is reused unchanged by
+        the disk->host promotion queue."""
+        return _DiskFaultView(self)
+
+
+class _DiskFaultView:
+    """Adapter presenting `FaultInjector`'s disk scope through the
+    device-injector interface (see `FaultInjector.disk_view`)."""
+
+    def __init__(self, injector: "FaultInjector"):
+        self._inj = injector
+        self.plan = injector.plan
+
+    def transfer_fails(self, key, now: float) -> bool:
+        return self._inj.disk_transfer_fails(key, now)
+
+    def transfer_extra_s(self, key, start: float) -> float:
+        return self._inj.disk_transfer_extra_s(key, start)
+
+    def bandwidth_factor(self, key, t: float) -> float:
+        return self._inj.disk_bandwidth_factor(key, t)
+
+    def predictor_blackout(self, t: float) -> bool:
+        return self._inj.predictor_blackout(t)
+
+    def link_degraded(self, t: float) -> bool:
+        return self._inj.disk_link_degraded(t)
+
+    def attach_link(self, link) -> None:
         link.bandwidth_hook = lambda tr, t: self.bandwidth_factor(tr.key, t)
         link.latency_hook = lambda tr, t: self.transfer_extra_s(tr.key, t)
 

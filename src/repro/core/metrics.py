@@ -189,6 +189,11 @@ class ServingReport:
     n_retries: int = 0            # demand-transfer retry attempts
     n_degraded_steps: int = 0     # decode iterations in degraded mode
     n_shed: int = 0               # requests dropped past their deadline
+    # tiered expert store (disk->host->device, core.expert_tiers) health —
+    # all zero when serving from a pre-staged host store
+    n_host_hits: int = 0          # demanded experts already host-staged
+    n_host_misses: int = 0        # demanded experts promoted from disk
+    disk_stall_s: float = 0.0     # exposed disk-link stall
 
     def add_request(self, m: RequestMetrics) -> None:
         self.requests.append(m)
@@ -253,6 +258,9 @@ class ServingReport:
             "n_retries": self.n_retries,
             "n_degraded_steps": self.n_degraded_steps,
             "n_shed": self.n_shed,
+            "n_host_hits": self.n_host_hits,
+            "n_host_misses": self.n_host_misses,
+            "disk_stall_s": self.disk_stall_s,
         }
         for name, dist in (("ttft", self.ttft), ("tpot", self.tpot),
                            ("queue_delay", self.queue_delay)):

@@ -67,10 +67,35 @@ def _serve_engine(args, cfg, specs, rng) -> None:
     eng = Engine(cfg, max_seq=max_seq)
     slots = max(2, int(cfg.moe.num_experts * args.capacity_frac))
     plan = FaultPlan.from_arg(args.fault_plan)
+    store = None
+    if args.expert_store_dir:
+        # disk->host->device tiered expert store (core.expert_tiers):
+        # export shards on first use, then serve through the budgeted
+        # host staging tier instead of the pre-staged HostExpertStore
+        import os
+
+        from repro.core.expert_tiers import (SHARD_MANIFEST,
+                                             TieredExpertStore,
+                                             export_expert_shards)
+        from repro.runtime.engine import build_host_store
+        sdir = args.expert_store_dir
+        if not os.path.exists(os.path.join(sdir, SHARD_MANIFEST)):
+            export_expert_shards(build_host_store(eng.model, eng.params),
+                                 sdir)
+            print(f"exported expert shards to {sdir}")
+        budget = (args.host_budget_mb * 1e6
+                  if args.host_budget_mb is not None else None)
+        store = TieredExpertStore(sdir, host_budget_bytes=budget,
+                                  disk_bandwidth=args.disk_bandwidth)
+        print(f"tiered store: {store.total_expert_bytes/1e6:.1f}MB experts, "
+              f"host budget "
+              f"{store.model.host_budget_bytes/1e6:.1f}MB, "
+              f"disk_bw={args.disk_bandwidth:g}B/tick")
     sb = SlotBufferEngine(cfg, eng.params, eng.model,
                           n_slots_per_layer=slots, max_seq=max_seq,
                           faults=plan, retry_max=args.retry_max,
-                          retry_backoff_s=args.retry_backoff)
+                          retry_backoff_s=args.retry_backoff,
+                          store=store)
     srv = ServingEngine(sb, EngineServingConfig(
         max_batch=args.batch, prefill_chunk=args.prefill_chunk,
         route_bias=args.route_bias,
@@ -98,6 +123,11 @@ def _serve_engine(args, cfg, specs, rng) -> None:
               f"retries={s['n_retries']} "
               f"degraded_steps={s['n_degraded_steps']} "
               f"shed={s['n_shed']}")
+    if store is not None:
+        print(f"  tier: host_hits={s['n_host_hits']} "
+              f"host_misses={s['n_host_misses']} "
+              f"disk_stall={s['disk_stall_s']:.3f} link-units "
+              f"({store.snapshot()['promotions']:.0f} promotions)")
 
 
 def main() -> None:
@@ -141,6 +171,20 @@ def main() -> None:
     ap.add_argument("--retry-backoff", type=float, default=1e-3,
                     help="base exponential-backoff delay (s) between "
                          "demand-transfer retries")
+    ap.add_argument("--expert-store-dir", default=None,
+                    help="serve experts through the disk->host->device "
+                         "tiered store rooted here (engine backend; shards "
+                         "are exported on first use). Unset = pre-staged "
+                         "host store (bit-exact pre-tier behavior)")
+    ap.add_argument("--host-budget-mb", type=float, default=None,
+                    help="host staging tier byte budget in MB (default: "
+                         "everything fits). Engine backend uses it "
+                         "directly; sim backend converts to a fraction of "
+                         "total expert bytes")
+    ap.add_argument("--disk-bandwidth", type=float, default=2e9,
+                    help="disk->host promotion link bandwidth (bytes per "
+                         "link-clock unit: engine ticks once per MoE "
+                         "layer; sim uses modeled seconds)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.requests < 1:
@@ -203,6 +247,12 @@ def main() -> None:
                          retry_max=args.retry_max,
                          retry_backoff_s=args.retry_backoff,
                          deadline_s=args.deadline)
+    if args.host_budget_mb is not None:
+        scfg.host_budget_frac = min(
+            1.0, args.host_budget_mb * 1e6 / (sim.expert_bytes * L * M))
+        scfg.disk_bandwidth = args.disk_bandwidth
+        print(f"host tier: budget_frac={scfg.host_budget_frac:.2f} "
+              f"disk_bw={scfg.disk_bandwidth:g}B/s")
     print(f"platform={hw.name} expert_bytes={sim.expert_bytes/1e6:.1f}MB "
           f"layer_time={sim.layer_time_s*1e3:.3f}ms "
           f"capacity={sim.capacity_experts}/{L*M} slots={args.batch}")
@@ -230,6 +280,10 @@ def main() -> None:
                   f"retries={s['n_retries']} "
                   f"degraded_steps={s['n_degraded_steps']} "
                   f"shed={s['n_shed']}")
+        if scfg.host_budget_frac is not None:
+            print(f"  {'':14s} tier: host_hits={s['n_host_hits']} "
+                  f"host_misses={s['n_host_misses']} "
+                  f"disk_stall={s['disk_stall_s']*1e3:.3f}ms")
 
 
 if __name__ == "__main__":

@@ -76,6 +76,21 @@ def _layer_params(model: Model, params, i: int):
     return params["tail"][j - model.num_units * nu]
 
 
+def build_host_store(model: Model, params) -> HostExpertStore:
+    """Pre-staged contiguous host copies of every MoE layer's experts —
+    the same store `SlotBufferEngine` builds internally; exposed so
+    callers can `export_expert_shards` it or hand it to a tiered setup."""
+    store = HostExpertStore()
+    li = 0
+    for i, s in enumerate(_all_specs(model)):
+        if not s.is_moe:
+            continue
+        mp = _layer_params(model, params, i)["moe"]
+        store.add_layer(li, mp["w_gate"], mp["w_up"], mp["w_down"])
+        li += 1
+    return store
+
+
 class Engine:
     """Single-model inference engine with trace collection."""
 
@@ -292,6 +307,9 @@ class SlotPathStats:
     retries: int = 0           # demand swap-in retry attempts
     degraded_steps: int = 0    # decode steps in degraded mode (resident-only
                                # routing engaged or watchdog tripped)
+    host_hits: int = 0         # demanded experts already staged in host tier
+    host_misses: int = 0       # demanded experts promoted disk->host first
+    disk_stall_s: float = 0.0  # exposed disk-link stall (link-clock units)
 
     def snapshot(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -403,7 +421,8 @@ class SlotBufferEngine:
                  retry_max: int = 3, retry_backoff_s: float = 1e-3,
                  degraded_route_bias: float = 4.0,
                  degraded_recover_streak: int = 8,
-                 watchdog: Optional[StepWatchdog] = None):
+                 watchdog: Optional[StepWatchdog] = None,
+                 store: Optional[Any] = None):
         assert cfg.moe is not None
         self.cfg = cfg
         self.model = model
@@ -436,11 +455,24 @@ class SlotBufferEngine:
         # per-absolute-layer params, sliced from the stacked tree ONCE
         self._p = [_layer_params(model, params, i)
                    for i in range(len(self.specs))]
-        # pre-staged contiguous host views of every layer's expert weights
-        self.store = HostExpertStore()
-        for li, i in enumerate(self.moe_layer_ids):
-            mp = self._p[i]["moe"]
-            self.store.add_layer(li, mp["w_gate"], mp["w_up"], mp["w_down"])
+        # expert weight source: pre-staged contiguous host views by default,
+        # or a caller-supplied TieredExpertStore (core.expert_tiers) whose
+        # host residency the demand/prefetch paths must guarantee first
+        if store is None:
+            self.store = HostExpertStore()
+            for li, i in enumerate(self.moe_layer_ids):
+                mp = self._p[i]["moe"]
+                self.store.add_layer(li, mp["w_gate"], mp["w_up"],
+                                     mp["w_down"])
+            self.tiers = None
+        else:
+            self.store = store
+            self.tiers = store if hasattr(store, "demand_host") else None
+            if self.tiers is not None:
+                assert fused, "tiered expert store requires the fused path"
+                tm = self.tiers.model
+                assert (tm.L, tm.E) == (L, E), (
+                    f"shard store shape ({tm.L},{tm.E}) != model ({L},{E})")
         # transfer accounting through the paper's link/prefetcher model
         # (virtual time: one unit per MoE layer dispatch)
         self.link = TransferLink(bandwidth=link_bandwidth)
@@ -509,6 +541,14 @@ class SlotBufferEngine:
         self.degraded_recover_streak = int(degraded_recover_streak)
         self._degraded = False
         self._fault_ok_streak = 0
+        # tiered store: share the adaptive controller (its layer-time /
+        # stall signals size the disk horizon S_disk) and the fault plan's
+        # disk scope (independent draws from the device link's)
+        if self.tiers is not None:
+            if self.tiers.model.controller is None:
+                self.tiers.model.controller = self.controller
+            if self.faults is not None:
+                self.tiers.set_faults(self.faults, retry_max=self.retry_max)
 
     # -- jitted per-layer functions (compiled once per layer shape) ---------
     @staticmethod
@@ -927,6 +967,51 @@ class SlotBufferEngine:
                               and self.watchdog.tripped):
             self.stats.degraded_steps += 1
 
+    # -- host tier (core.expert_tiers) --------------------------------------
+    def _tier_demand(self, key: Tuple[int, int]) -> bool:
+        """Guarantee host-tier residency for a demanded expert (always True
+        on a pre-staged store). A host miss blocks on the disk link and
+        records a stall just like a device miss; returns False only when
+        injected disk faults defeat every retry — the caller then drops
+        the expert's tokens and degrades (never deadlocks)."""
+        if self.tiers is None:
+            return True
+        r = self.tiers.demand_host(key, self._clock)
+        if r is None:
+            self.stats.host_misses += 1
+            self._enter_degraded()
+            return False
+        stall, was_hit = r
+        if was_hit:
+            self.stats.host_hits += 1
+        else:
+            self.stats.host_misses += 1
+            self.stats.disk_stall_s += stall
+        return True
+
+    def _tier_ready(self, key: Tuple[int, int]) -> bool:
+        """Speculative fills only proceed for host-resident experts; a
+        host-absent key queues a disk->host promotion instead of blocking
+        the window."""
+        if self.tiers is None:
+            return True
+        if self.tiers.host_resident(key):
+            return True
+        self.tiers.request_host(key, self._clock)
+        return False
+
+    def _advance_clock(self) -> None:
+        """One virtual link-clock tick per MoE-layer dispatch: the device
+        prefetcher lands arrivals; with a tiered store the disk link lands
+        promotions and the popularity-driven S_disk prefetcher issues the
+        next disk window."""
+        self._clock += 1.0
+        self.prefetcher.advance(self._clock)
+        if self.tiers is not None:
+            self.tiers.advance(self._clock)
+            n_moe = max(len(self.moe_layer_ids), 1)
+            self.tiers.auto_prefetch(self._clock, int(self._clock) % n_moe)
+
     # -- residency ----------------------------------------------------------
     def ensure_resident(self, li: int, experts, *,
                         speculative: bool = False) -> int:
@@ -945,6 +1030,9 @@ class SlotBufferEngine:
         ACTUAL routing is verified; touching a predicted key here must not
         declare the prediction correct."""
         keys = [(li, int(e)) for e in experts]
+        if self.tiers is not None and not speculative:
+            # host-tier demand-size EWMA: the n_e term of S_disk
+            self.tiers.note_layer_demand(len(keys))
         for key in keys:
             self.cache.pin(key)
         missing: List[int] = []
@@ -952,6 +1040,8 @@ class SlotBufferEngine:
         try:
             for key in keys:
                 if self.cache.touch(key):
+                    if self.tiers is not None and not speculative:
+                        self.tiers.note_access(key)
                     if not speculative and key in self._prefetch_pending:
                         self._prefetch_pending.discard(key)
                         self._settle_hit(
@@ -968,9 +1058,20 @@ class SlotBufferEngine:
                         # below) and degraded routing engages. A dead link
                         # can never deadlock a decode step.
                         continue
+                    if not self._tier_demand(key):
+                        # the disk link defeated the promotion: the expert
+                        # cannot be staged — degrade exactly like an
+                        # exhausted device demand above
+                        continue
                     self.prefetcher.demand(key, self._clock)
-                elif not self._fault_transfer_ok(key, demand=False):
-                    continue
+                else:
+                    if not self._fault_transfer_ok(key, demand=False):
+                        continue
+                    if not self._tier_ready(key):
+                        # speculative fills never block on the disk: skip
+                        # the host-absent key (a promotion is queued; the
+                        # next window or a demand picks it up)
+                        continue
                 try:
                     victim = self.cache.insert(key)
                 except RuntimeError:     # every resident expert is needed NOW
@@ -986,6 +1087,10 @@ class SlotBufferEngine:
                 if victim is not None:
                     self._evict(victim)
                 slots.append(self.table.assign(li, key[1]))
+                if self.tiers is not None:
+                    # slot residency pins the host copy (in-flight/resident
+                    # experts can never be dropped from the host tier)
+                    self.tiers.pin(key)
                 missing.append(key[1])
         finally:
             for key in keys:
@@ -1019,6 +1124,8 @@ class SlotBufferEngine:
         verification. Park the link-readiness snapshot for
         `_settle_prediction` instead of guessing."""
         self.table.release(*victim)
+        if self.tiers is not None:
+            self.tiers.unpin(victim)
         deferred = False
         if victim in self._prefetch_pending:
             self._prefetch_pending.discard(victim)
@@ -1058,6 +1165,11 @@ class SlotBufferEngine:
         residency. Returns #experts issued."""
         slots: List[int] = []
         issued_keys: List[Tuple[int, int]] = []
+        if self.tiers is not None:
+            # predictor output feeds the disk tier's popularity stats even
+            # for keys the device window cannot take this round
+            self.tiers.note_predicted(
+                [(li, int(e)) for li, experts in plan for e in experts])
         try:
             for li, experts in plan:
                 stop = False
@@ -1067,6 +1179,8 @@ class SlotBufferEngine:
                         continue
                     if not self._fault_transfer_ok(key, demand=False):
                         continue     # failed speculative fill: skip the key
+                    if not self._tier_ready(key):
+                        continue     # host-absent: promotion queued instead
                     if self.cache.free_slots <= 0 and not any(
                             k not in self.cache.pinned
                             for k in self.cache.low):
@@ -1084,6 +1198,8 @@ class SlotBufferEngine:
                     self.cache.pin(key)
                     issued_keys.append(key)
                     slots.append(self.table.assign(li, int(e)))
+                    if self.tiers is not None:
+                        self.tiers.pin(key)
                     self._prefetch_pending.add(key)
                 if stop:
                     break
@@ -1122,8 +1238,7 @@ class SlotBufferEngine:
             # ONE small host pull: (2, E) needed/predicted bool masks
             masks_h = np.asarray(masks)
             self.stats.host_syncs += 1
-            self._clock += 1.0
-            self.prefetcher.advance(self._clock)
+            self._advance_clock()
             needed = np.nonzero(masks_h[0])[0]
             predicted = np.nonzero(masks_h[1])[0] if want_pred else []
             # paper §3.3.1: tiers track the sweep — experts needed now or
@@ -1230,8 +1345,7 @@ class SlotBufferEngine:
         masks = self._sync_masks_dev(li, s, flat, needed_dev, active_dev)
         masks_h = np.asarray(masks)          # ONE (S+1, E) blocking pull
         self.stats.host_syncs += 1
-        self._clock += 1.0
-        self.prefetcher.advance(self._clock)
+        self._advance_clock()
         needed, predicted = self._decode_sync_rows(li, s, masks_h)
         self._sync_moe_layer(li, needed, predicted)
         return jnp.asarray(self.table.layer_slot_map(li))
@@ -1607,8 +1721,7 @@ class SlotBufferEngine:
             else:
                 x2, flat, r, needed_dev, c2 = self._dispatch(
                     self._pre_decode_fn(spec), p, x_in, old_c, clen)
-            self._clock += 1.0
-            self.prefetcher.advance(self._clock)
+            self._advance_clock()
             if li in predicted:
                 # ---- speculative layer: no host pull ----------------------
                 ckpt[i] = (x_in, old_c)
@@ -1912,8 +2025,7 @@ class SlotBufferEngine:
                 logits = lg
             for jj, aj in enumerate(seg):
                 caches[aj] = new_cs[jj]
-            self._clock += 1.0
-            self.prefetcher.advance(self._clock)
+            self._advance_clock()
             snap = self.table.layer_slot_map(li)
             ready_snap = {kk: self.prefetcher.is_ready(kk, self._clock)
                           for kk in self._prefetch_pending if kk[0] == li}

@@ -103,6 +103,17 @@ class SimCore:
         self.retry_max = 0
         self.retry_backoff_s = 0.0
         self.n_demand_failures = 0    # demand transfers that failed for good
+        # optional disk->host staging tier (core.expert_tiers): when set,
+        # every demand traverses the two-link chain disk->host->device and
+        # the popularity-driven S_disk prefetcher runs per layer access
+        self.tier = None
+
+    def set_tier(self, tier) -> None:
+        """Attach a `HostTierModel` beneath the device cache. The tier
+        shares this core's controller so its layer-time/stall signals size
+        the disk horizon, mirroring the live engine."""
+        self.tier = tier
+        tier.controller = self.controller
 
     def set_faults(self, injector, retry_max: int = 3,
                    retry_backoff_s: float = 0.0) -> None:
@@ -128,9 +139,14 @@ class SimCore:
         if key in self.cache:
             return
         victim = self.cache.insert(key, high=not self.policy.two_level_lru)
+        if self.tier is not None:
+            # device residency pins the host copy (tier can't drop it)
+            self.tier.pin(key)
         if victim is not None:
             self.pf.forget(victim)
             self.pf.writeback(0.0)
+            if self.tier is not None:
+                self.tier.unpin(victim)
             if victim in self.prefetched_unused:
                 self.prefetched_unused.discard(victim)
                 sm.n_overfetched += 1
@@ -158,12 +174,17 @@ class SimCore:
         if actual is None:
             actual = _distinct(assignments)
         keys = [(li, e) for e in actual]
+        if self.tier is not None:
+            self.tier.advance(now)
+            self.tier.note_layer_demand(len(keys))
 
         missing_inflight: List[Key] = []
         missing_cold: List[Key] = []
         for key in keys:
             if self.cache.touch(key, high=self.policy.two_level_lru):
                 sm.n_hits += 1
+                if self.tier is not None:
+                    self.tier.note_access(key)
                 self.prefetched_unused.discard(key)
             else:
                 sm.n_misses += 1
@@ -176,7 +197,21 @@ class SimCore:
         ready_t = now
         failed: Set[Key] = set()
         for key in missing_cold + missing_inflight:
-            t_done = self.pf.demand(key, now, max_retries=self.retry_max,
+            t_host = now
+            if self.tier is not None:
+                # the two-link chain: host residency first (a host miss
+                # stalls on the disk link and records a controller stall,
+                # just like a device miss), then the device transfer
+                # starts once the expert is staged
+                r = self.tier.demand(key, now)
+                if r is None:
+                    # disk faults defeated the promotion: the expert's
+                    # tokens drop, mirroring the device-link degradation
+                    self.n_demand_failures += 1
+                    failed.add(key)
+                    continue
+                t_host = now + r[0]
+            t_done = self.pf.demand(key, t_host, max_retries=self.retry_max,
                                     backoff_s=self.retry_backoff_s)
             if t_done is None:
                 # permanent transfer failure (fault injection): the layer
@@ -193,6 +228,13 @@ class SimCore:
         # transfer that will never land
         missing = set(missing_cold) | set(missing_inflight)
         waited = missing - failed
+        if self.tier is not None:
+            # issue the long-horizon disk promotions at layer START: the
+            # d=1 wave then has this layer's compute time as lead, exactly
+            # like the live engine (promotion at clock t, demand at t+1) —
+            # issued at layer finish it would land at the very instant the
+            # next layer demands it, i.e. always late
+            self.tier.auto_prefetch(now, li)
 
         # schedule layer compute
         if self.policy.cache_aware and missing:
@@ -227,8 +269,16 @@ class SimCore:
     def issue_prefetches(self, pkeys: Iterable[Key], now: float) -> None:
         if self.faults is not None and self.faults.predictor_blackout(now):
             return        # predictor signal dark: nothing to speculate on
+        if self.tier is not None:
+            self.tier.note_predicted(pkeys)
         for key in pkeys:
             if key not in self.cache:
+                if self.tier is not None \
+                        and not self.tier.host_resident(key):
+                    # host-absent: queue the disk->host promotion; the
+                    # device prefetch happens once the expert is staged
+                    self.tier.request(key, now)
+                    continue
                 self.pf.prefetch(key, now)
                 self.prefetched_unused.add(key)
 

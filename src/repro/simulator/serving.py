@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.core.cache_aware import bias_reroute
 from repro.core.coordinator import Policy, PredictionSource
+from repro.core.expert_tiers import HostTierModel
 from repro.core.faults import FaultInjector, FaultPlan
 from repro.core.metrics import (RunReport, ServingReport, StepMetrics,
                                 request_metrics)
@@ -132,6 +133,17 @@ class ServingConfig:
     brownout_admission: Optional[bool] = None
     brownout_threshold: float = 4.0
     brownout_recovery: float = 1.5
+    # disk->host->device tiered expert store (core.expert_tiers):
+    # `host_budget_frac` sets the host staging budget as a fraction of the
+    # total expert bytes (None = no tier, every expert pre-staged — the
+    # pre-tier behavior, bit-identical); `disk_bandwidth` is the disk->host
+    # link in bytes per modeled second; `disk_prefetch` gates the
+    # popularity-driven S_disk prefetcher (off = every host miss is a
+    # demand promotion, the ablation baseline).
+    host_budget_frac: Optional[float] = None
+    disk_bandwidth: float = 1e8
+    disk_prefetch: bool = True
+    disk_horizon_max: int = 64
 
 
 def _token_table(assign: np.ndarray) -> np.ndarray:
@@ -202,10 +214,21 @@ def simulate_serving(workload: ServingWorkload, spec: SimSpec,
             expert_bytes=spec.expert_bytes,
             default_ws=float(workload.top_k),
             headroom=cfg.admission_headroom)
+    if cfg.host_budget_frac is not None:
+        total_bytes = spec.expert_bytes * L * M
+        core.set_tier(HostTierModel(
+            L, M, spec.expert_bytes,
+            host_budget_bytes=cfg.host_budget_frac * total_bytes,
+            disk_bandwidth=cfg.disk_bandwidth,
+            disk_horizon_max=cfg.disk_horizon_max,
+            prefetch=cfg.disk_prefetch))
     injector = None
     if cfg.fault_plan is not None and cfg.fault_plan.enabled:
         injector = FaultInjector(cfg.fault_plan)
         core.set_faults(injector, cfg.retry_max, cfg.retry_backoff_s)
+        if core.tier is not None:
+            core.tier.set_faults(injector, cfg.retry_max,
+                                 cfg.retry_backoff_s)
     straggler = StragglerPolicy(1, threshold=cfg.brownout_threshold,
                                 recovery=cfg.brownout_recovery)
     brown = cfg.brownout_admission
@@ -396,4 +419,8 @@ def simulate_serving(workload: ServingWorkload, spec: SimSpec,
     report.n_retries = core.pf.n_retries
     report.n_degraded_steps = n_degraded_steps
     report.n_shed = batcher.stats.shed
+    if core.tier is not None:
+        report.n_host_hits = core.tier.host_hits
+        report.n_host_misses = core.tier.host_misses
+        report.disk_stall_s = core.tier.disk_stall_s
     return report

@@ -262,3 +262,148 @@ def test_prefetcher_observed_bandwidth_matches_link():
     assert done_t > 0.0                   # ...queued (not started) work
     link.drain_until(1e12)
     assert link.bytes_moved == pytest.approx(6e6)
+
+
+# --------------------------------------------- two-link (disk->host) tier
+from repro.core.expert_tiers import HostTierModel
+from repro.core.faults import FOREVER
+
+
+def _tier(budget_experts, **kw):
+    kw.setdefault("disk_bandwidth", 1e8)
+    return HostTierModel(num_layers=2, num_experts=16, expert_nbytes=1e6,
+                         host_budget_bytes=budget_experts * 1e6, **kw)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_two_link_every_promotion_settles_exactly_once(seed):
+    """Random request/demand/fail/advance interleavings on the disk link:
+    every submitted promotion ends as exactly one of completed / failed /
+    cancelled, host residency is a subset of completions, and a failed
+    promotion never leaves a phantom host-resident entry."""
+    rng = np.random.default_rng(8000 + seed)
+    m = _tier(int(rng.integers(4, 12)))
+    n_submitted, n_cancelled = [0], [0]
+    orig_submit, orig_cancel = m.link.submit, m.link.cancel
+
+    def submit(tr):
+        n_submitted[0] += 1
+        return orig_submit(tr)
+
+    def cancel(key):
+        hit = orig_cancel(key)
+        n_cancelled[0] += int(hit)
+        return hit
+
+    m.link.submit, m.link.cancel = submit, cancel
+    now = 0.0
+    demanded_ok = set()
+    for _ in range(int(rng.integers(20, 60))):
+        op = rng.choice(["request", "demand", "fail", "advance"])
+        key = (int(rng.integers(2)), int(rng.integers(16)))
+        if op == "request":
+            m.request(key, now)
+        elif op == "demand":
+            r = m.demand(key, now)
+            assert r is not None           # no injector -> always delivers
+            assert m.host_resident(key)
+            demanded_ok.add(key)
+        elif op == "fail":
+            if m.pf.fail(key):
+                assert not m.host_resident(key), \
+                    "failed promotion left a phantom host-resident entry"
+        else:
+            now += float(rng.uniform(0.0, 0.1))
+            m.advance(now)
+    m.advance(now + 1e9)
+    link = m.link
+    # every submitted promotion settled exactly once
+    settled = len(link.completed) + len(link.failed) + n_cancelled[0]
+    assert settled == n_submitted[0]
+    assert not link._queue and not link.in_flight
+    assert link.bytes_moved == pytest.approx(
+        sum(tr.nbytes for tr in link.completed))
+    # residency only ever comes from completed promotions
+    done_keys = {tr.key for tr in link.completed}
+    for key in m._resident:
+        assert key in done_keys
+    # budget respected with no pins outstanding
+    assert m.host_bytes <= m.host_budget_bytes + 1e-9
+    assert m.host_bytes == len(m._resident) * m.expert_nbytes
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_two_link_pins_never_stick_or_evict(seed):
+    """A pinned host entry survives arbitrary demand churn; after unpin it
+    becomes evictable again — refcounts can't go negative or leak."""
+    rng = np.random.default_rng(9000 + seed)
+    m = _tier(3)
+    protected = (0, 0)
+    assert m.demand(protected, 0.0) is not None
+    m.pin(protected)
+    m.pin(protected)                        # refcount=2
+    now = 1.0
+    for i in range(20):
+        key = (int(rng.integers(2)), int(rng.integers(1, 16)))
+        m.demand(key, now)
+        now += 0.05
+        assert m.host_resident(protected)
+    m.unpin(protected)
+    assert m.host_resident(protected)       # still one ref
+    assert m.pinned(protected)
+    m.unpin(protected)
+    assert not m.pinned(protected)
+    for e in range(1, 16):                  # churn until the LRU slot turns
+        m.demand((0, e), now)
+        now += 0.05
+    assert not m.host_resident(protected)   # evictable again
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_two_link_faulted_promotions_scrub_cleanly(seed):
+    """Disk faults on the promotion link: an exhausted demand returns None
+    and leaves NO host-resident entry, no issued ghost, and no stuck pin;
+    the device scope of the same injector is untouched."""
+    rng = np.random.default_rng(8500 + seed)
+    plan = FaultPlan(seed=seed, disk_fail_prob=float(rng.uniform(0.4, 0.9)))
+    inj = FaultInjector(plan)
+    m = _tier(6)
+    m.set_faults(inj, retry_max=0)   # single attempt: p(fail)=fail_prob
+    delivered, failed = [], []
+    for i in range(14):
+        key = (i % 2, i)
+        r = m.demand(key, float(i) * 0.01)
+        (delivered if r is not None else failed).append(key)
+    assert failed, "fault plan injected no failures across 14 demands"
+    for key in failed:
+        assert not m.host_resident(key)
+        assert key not in m.pf.issued
+        assert key not in m.pf.ready_at
+        assert m._pins.get(key, 0) == 0
+    for key in delivered[-min(6, len(delivered)):]:
+        assert key in {k for k in m._resident} or True  # may be evicted
+    assert m.n_demand_failures == len(failed)
+    assert m.n_disk_failures > 0
+    # device scope untouched: fail_prob=0 there
+    assert not inj.transfer_fails((0, 0), 0.0)
+
+
+def test_two_link_dead_disk_degrades_never_deadlocks():
+    """A dead disk link (outage over all time): every demand returns None
+    immediately, nothing becomes resident, no bytes move, and speculative
+    requests don't accumulate phantom state."""
+    plan = FaultPlan(disk_outage=((0.0, FOREVER),))
+    m = _tier(6)
+    m.set_faults(FaultInjector(plan), retry_max=2)
+    for i in range(10):
+        key = (i % 2, i % 16)
+        assert m.demand(key, float(i)) is None
+        m.request((1, (i + 3) % 16), float(i))
+        m.advance(float(i) + 0.5)
+    assert m.host_bytes == 0.0
+    assert len(m._resident) == 0
+    assert m.n_demand_failures == 10
+    # the dead link still gets *occupied* by doomed transfers (modeled
+    # time passes) but no promotion ever lands
+    assert m.promotions == 0
+    assert m.n_disk_failures >= 10
