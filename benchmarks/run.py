@@ -16,7 +16,8 @@ from benchmarks.common import Csv
 def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     from benchmarks import (bench_cache_aware, bench_decode, bench_faults,
-                            bench_prefill, bench_serving_engine,
+                            bench_integrity, bench_prefill,
+                            bench_serving_engine,
                             bench_slotpath, bench_tiers,
                             fig2_step_size, fig3_batch_size,
                             fig4_diversity, fig7_overall_latency,

@@ -1,0 +1,153 @@
+"""Ingest real checkpoints (safetensors) into the expert shard format.
+
+`core.expert_tiers.export_expert_shards` already accepts any
+``{moe_layer_index: (w_gate, w_up, w_down)}`` mapping — this module
+supplies that mapping *lazily* from HuggingFace-style safetensors files,
+so a checkpoint larger than host RAM streams through one MoE layer at a
+time: scan every file's key table up front (cheap — safetensors headers
+are tiny), then materialize a single layer's expert stack only when the
+exporter asks for it. The shard writer handles atomicity, per-record
+CRC-32 stamping, and exotic dtypes (`checkpoint.serde` raw views), so
+ingested real weights round-trip bitwise exactly like synthetic ones.
+
+Name matching covers the common MoE naming families —
+
+    model.layers.3.mlp.experts.7.gate_proj.weight        (qwen/deepseek)
+    model.layers.3.block_sparse_moe.experts.7.w1.weight  (mixtral)
+
+— via one regex; pass ``pattern`` for anything else (it must expose
+``layer``/``expert``/``proj`` groups). HF linear weights are stored
+``(out_features, in_features)``; the slot-buffer convention is
+``w_gate``/``w_up`` as ``(d_model, d_ff)`` and ``w_down`` as
+``(d_ff, d_model)``, so ingestion transposes by default.
+
+``safetensors`` is an optional dependency: importing this module is
+free, only `ingest_safetensors` requires it.
+"""
+from __future__ import annotations
+
+import re
+from collections.abc import Mapping
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.expert_tiers import TENSOR_NAMES, export_expert_shards
+
+DEFAULT_PATTERN = re.compile(
+    r"(?:^|\.)layers?\.(?P<layer>\d+)\."
+    r"(?:mlp|block_sparse_moe|feed_forward|moe)\.experts\."
+    r"(?P<expert>\d+)\.(?P<proj>gate_proj|up_proj|down_proj|w1|w3|w2)"
+    r"\.weight$")
+
+# projection name -> slot in the (w_gate, w_up, w_down) record
+PROJ_SLOT = {"gate_proj": 0, "w1": 0,
+             "up_proj": 1, "w3": 1,
+             "down_proj": 2, "w2": 2}
+
+
+def parse_expert_key(name: str,
+                     pattern: Optional[re.Pattern] = None,
+                     ) -> Optional[Tuple[int, int, int]]:
+    """Parse one checkpoint tensor name into ``(layer, expert, slot)``
+    (slot indexes `TENSOR_NAMES`), or None for a non-expert tensor."""
+    m = (pattern or DEFAULT_PATTERN).search(name)
+    if m is None:
+        return None
+    return (int(m.group("layer")), int(m.group("expert")),
+            PROJ_SLOT[m.group("proj")])
+
+
+class _LazyExpertLayers(Mapping):
+    """Read-only mapping ``{dense_moe_layer: (w_gate, w_up, w_down)}``
+    that materializes one layer's expert stack per access — the exporter
+    walks layers in order, so peak memory is a single MoE layer."""
+
+    def __init__(self, handles: Dict[str, object],
+                 index: Dict[Tuple[int, int, int], Tuple[str, str]],
+                 layer_ids: List[int], num_experts: int, transpose: bool):
+        self._handles = handles
+        self._index = index
+        self._layer_ids = layer_ids          # checkpoint layer id per dense
+        self._E = num_experts
+        self._transpose = transpose
+
+    def __len__(self) -> int:
+        return len(self._layer_ids)
+
+    def __iter__(self) -> Iterator[int]:
+        return iter(range(len(self._layer_ids)))
+
+    def __getitem__(self, dense: int) -> Tuple[np.ndarray, ...]:
+        ckpt_layer = self._layer_ids[dense]
+        out = []
+        for slot in range(len(TENSOR_NAMES)):
+            ws = []
+            for e in range(self._E):
+                fname, tname = self._index[(ckpt_layer, e, slot)]
+                w = np.asarray(self._handles[fname].get_tensor(tname))
+                if self._transpose:
+                    w = np.ascontiguousarray(np.swapaxes(w, -1, -2))
+                ws.append(w)
+            out.append(np.stack(ws))
+        return tuple(out)
+
+
+def scan_safetensors(paths: Sequence[str],
+                     pattern: Optional[re.Pattern] = None):
+    """Open + index a set of safetensors files. Returns
+    ``(handles, index, layer_ids, num_experts)`` where `index` maps
+    ``(ckpt_layer, expert, slot) -> (path, tensor_name)`` and
+    `layer_ids` is the sorted checkpoint layer ids (densified by
+    position into shard layer indices)."""
+    try:
+        from safetensors import safe_open
+    except ImportError as e:                 # pragma: no cover
+        raise ImportError(
+            "ingest_safetensors needs the optional `safetensors` package"
+        ) from e
+    handles: Dict[str, object] = {}
+    index: Dict[Tuple[int, int, int], Tuple[str, str]] = {}
+    for p in paths:
+        f = safe_open(p, framework="numpy")
+        handles[p] = f
+        for name in f.keys():
+            parsed = parse_expert_key(name, pattern)
+            if parsed is None:
+                continue
+            if parsed in index:
+                raise ValueError(
+                    f"duplicate expert tensor for {parsed}: "
+                    f"{index[parsed][1]!r} and {name!r}")
+            index[parsed] = (p, name)
+    if not index:
+        raise ValueError("no expert tensors matched the naming pattern in "
+                         f"{list(paths)}")
+    layer_ids = sorted({k[0] for k in index})
+    experts = sorted({k[1] for k in index})
+    if experts != list(range(len(experts))):
+        raise ValueError(f"expert ids are not dense 0..E-1: {experts}")
+    n_slots = len(TENSOR_NAMES)
+    for li in layer_ids:
+        for e in experts:
+            for slot in range(n_slots):
+                if (li, e, slot) not in index:
+                    raise ValueError(
+                        f"checkpoint layer {li} expert {e} is missing its "
+                        f"{TENSOR_NAMES[slot]} projection")
+    return handles, index, layer_ids, len(experts)
+
+
+def ingest_safetensors(paths: Union[str, Sequence[str]], out_dir: str, *,
+                       pattern: Optional[re.Pattern] = None,
+                       transpose: bool = True) -> str:
+    """Stream a safetensors checkpoint's MoE experts into an expert shard
+    directory (atomic, CRC-stamped — see `export_expert_shards`). Layer
+    ids are densified by sort order into shard layer indices 0..L-1.
+    Returns the shard directory path."""
+    if isinstance(paths, (str, bytes)):
+        paths = [paths]
+    handles, index, layer_ids, n_experts = scan_safetensors(paths, pattern)
+    layers = _LazyExpertLayers(handles, index, layer_ids, n_experts,
+                               transpose)
+    return export_expert_shards(layers, out_dir)

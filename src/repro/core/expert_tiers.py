@@ -48,6 +48,7 @@ import os
 import pathlib
 import shutil
 import tempfile
+import zlib
 from collections import OrderedDict
 from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
                     Tuple)
@@ -55,6 +56,7 @@ from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
 import numpy as np
 
 from repro.checkpoint.serde import decode_raw, encode_raw, storage_dtype
+from repro.core.integrity import IntegrityGuard
 from repro.core.prefetcher import Prefetcher, TransferLink
 
 Key = Tuple[int, int]                       # (moe_layer_index, expert_id)
@@ -103,14 +105,20 @@ def export_expert_shards(params: Any, out_dir: str) -> str:
                    for name, w, raw in zip(TENSOR_NAMES, ws, raws)]
         record_nbytes = sum(t["nbytes"] for t in tensors)
         fname = f"layer_{int(layer):05d}.bin"
+        crcs = []
         with open(tmp / fname, "wb") as f:
             for e in range(n_experts):
+                crc = 0
                 for raw in raws:
-                    f.write(raw[e].tobytes())
+                    b = raw[e].tobytes()
+                    crc = zlib.crc32(b, crc)
+                    f.write(b)
+                crcs.append(crc)
         manifest["layers"].append({
             "layer": int(layer), "file": fname,
             "num_experts": int(n_experts),
             "record_nbytes": int(record_nbytes),
+            "crc32": crcs,
             "tensors": tensors})
     (tmp / SHARD_MANIFEST).write_text(json.dumps(manifest))
     if out.exists():
@@ -164,6 +172,11 @@ class ExpertShardReader:
             if actual != expect:
                 raise ShardError(f"{f} is {actual} bytes, expected {expect} "
                                  "— truncated or corrupt shard")
+            crcs = rec.get("crc32")
+            if crcs is not None and len(crcs) != rec["num_experts"]:
+                raise ShardError(
+                    f"{f}: manifest lists {len(crcs)} checksums for "
+                    f"{rec['num_experts']} experts")
             self._layers[int(rec["layer"])] = rec
 
     def layers(self) -> List[int]:
@@ -175,6 +188,16 @@ class ExpertShardReader:
     def record_nbytes(self, layer: int) -> int:
         return int(self._layers[layer]["record_nbytes"])
 
+    def has_checksums(self) -> bool:
+        """True when every layer record carries per-expert CRC-32s
+        (pre-integrity manifests load fine, with verification off)."""
+        return all(rec.get("crc32") is not None
+                   for rec in self._layers.values())
+
+    def record_crc(self, layer: int, expert: int) -> Optional[int]:
+        crcs = self._layers[layer].get("crc32")
+        return None if crcs is None else int(crcs[expert])
+
     def _mmap(self, layer: int) -> np.memmap:
         if layer not in self._mmaps:
             rec = self._layers[layer]
@@ -182,7 +205,14 @@ class ExpertShardReader:
                                            dtype=np.uint8, mode="r")
         return self._mmaps[layer]
 
-    def read_expert(self, layer: int, expert: int) -> Tuple[np.ndarray, ...]:
+    def _record_span(self, layer: int, expert: int) -> Tuple[np.memmap, int]:
+        """Bounds-checked (mmap, record_offset) for one expert record.
+
+        The whole-file size is validated at construction, but the mmap is
+        lazy: a file truncated *after* the reader opened maps short. Check
+        the record's byte span against the actual mapping at every
+        materialization so a mid-record truncation raises `ShardError`
+        instead of serving a short read."""
         rec = self._layers.get(layer)
         if rec is None:
             raise ShardError(f"layer {layer} not present in shard store "
@@ -192,6 +222,44 @@ class ExpertShardReader:
                              f"[0, {rec['num_experts']}) for layer {layer}")
         mm = self._mmap(layer)
         off = expert * rec["record_nbytes"]
+        end = off + rec["record_nbytes"]
+        if end > mm.size:
+            raise ShardError(
+                f"{self.path / rec['file']}: record {expert} spans bytes "
+                f"[{off}, {end}) but only {mm.size} are mapped — shard "
+                "truncated after open")
+        return mm, off
+
+    def read_record_bytes(self, layer: int, expert: int) -> np.ndarray:
+        """One expert's raw record as a fresh uint8 copy (the integrity
+        layer checksums / decodes this, never the mmap itself)."""
+        mm, off = self._record_span(layer, expert)
+        n = self._layers[layer]["record_nbytes"]
+        return np.array(mm[off:off + n], dtype=np.uint8)
+
+    def decode_record(self, layer: int,
+                      raw: np.ndarray) -> Tuple[np.ndarray, ...]:
+        """Decode a raw uint8 record (from `read_record_bytes`) into the
+        per-tensor host arrays `read_expert` would return."""
+        rec = self._layers[layer]
+        buf = np.ascontiguousarray(raw, dtype=np.uint8)
+        if buf.size != rec["record_nbytes"]:
+            raise ShardError(f"record buffer is {buf.size}B, expected "
+                             f"{rec['record_nbytes']}B")
+        off, out = 0, []
+        for t in rec["tensors"]:
+            flat = np.frombuffer(buf, dtype=storage_dtype(t["dtype"]),
+                                 count=int(np.prod(t["shape"],
+                                                   dtype=np.int64)),
+                                 offset=off)
+            out.append(np.array(decode_raw(flat,
+                                           t["dtype"]).reshape(t["shape"])))
+            off += t["nbytes"]
+        return tuple(out)
+
+    def read_expert(self, layer: int, expert: int) -> Tuple[np.ndarray, ...]:
+        mm, off = self._record_span(layer, expert)
+        rec = self._layers[layer]
         out = []
         for t in rec["tensors"]:
             raw = np.frombuffer(mm, dtype=storage_dtype(t["dtype"]),
@@ -260,6 +328,15 @@ class HostTierModel:
         self.disk_late_hits = 0          # demanded while already in-flight
         self.n_demand_failures = 0       # promotions defeated by disk faults
         self.dropped_arrivals = 0        # speculative landings with no room
+        # integrity: verify/quarantine/re-fetch state (off by default —
+        # zero-cost, pre-feature behavior). The verify hooks are backend
+        # specific: the real store checksums real bytes, the simulator
+        # draws the same outcomes from the fault injector.
+        self.guard = IntegrityGuard()
+        self.verify_fn: Optional[Callable[[Key], bool]] = None
+        self.scrub_fn: Optional[Callable[[Key], bool]] = None
+        self._scrub_cursor = 0
+        self._scrub_miss_mark = 0
 
     # ------------------------------------------------------------ faults
     def set_faults(self, injector: Any, retry_max: int = 3,
@@ -272,6 +349,94 @@ class HostTierModel:
         self.pf.injector = view
         self.retry_max = int(retry_max)
         self.retry_backoff_s = float(retry_backoff_s)
+
+    # --------------------------------------------------------- integrity
+    def configure_integrity(self, mode: str, *, scrub_budget: int = 2,
+                            refetch_max: int = 3,
+                            verify_fn: Optional[Callable[[Key], bool]] = None,
+                            scrub_fn: Optional[Callable[[Key], bool]] = None,
+                            ) -> None:
+        """Enable promotion verification (and, in ``scrub`` mode, the
+        budgeted background scrubber). `verify_fn(key)` checks a freshly
+        promoted copy, `scrub_fn(key)` re-checks a host-resident one;
+        both return True when the copy is clean."""
+        self.guard = IntegrityGuard(mode, scrub_budget=scrub_budget,
+                                    refetch_max=refetch_max)
+        if verify_fn is not None:
+            self.verify_fn = verify_fn
+        if scrub_fn is not None:
+            self.scrub_fn = scrub_fn
+
+    def _verify(self, key: Key) -> bool:
+        return True if self.verify_fn is None else bool(self.verify_fn(key))
+
+    def _verified_delivery(self, key: Key, t_done: float) -> Optional[float]:
+        """Verify a completed demand promotion; on corruption, discard
+        the copy and re-fetch from disk (bounded by the guard's
+        ``refetch_max``). Returns the delivery time of the first clean
+        copy, or None once the key is permanently quarantined — the
+        caller degrades exactly like an exhausted faulted demand."""
+        g = self.guard
+        t = t_done
+        while not self._verify(key):
+            n = g.record_corrupt(key)
+            self.pf.forget(key, count_unused=False)
+            if n > g.refetch_max:
+                g.quarantine(key)
+                return None
+            t2 = self.pf.demand(key, t, max_retries=self.retry_max,
+                                backoff_s=self.retry_backoff_s)
+            if t2 is None:               # disk faults ate the re-fetch too
+                g.quarantine(key)
+                return None
+            t = t2
+        g.record_clean(key)
+        return t
+
+    def scrub_tick(self, now: float) -> int:
+        """Budgeted background re-verification of host-resident copies.
+
+        Paced off the controller's stall signal: a tick is skipped
+        whenever the tier serviced demand misses (or the shared
+        `StepSizeController` has stalls pending) since the last one —
+        scrubbing is idle-time work and must never add pressure to a
+        pipeline that is already behind. Visits unpinned residents
+        round-robin, ``scrub_budget`` verifications per tick, pinning
+        each copy only for the duration of its check (pins never leak).
+        A corrupt copy is evicted and transparently re-promoted from
+        disk; the re-promotion re-verifies on arrival like any other."""
+        g = self.guard
+        if not g.scrub_enabled or self.scrub_fn is None:
+            return 0
+        busy = self.host_misses > self._scrub_miss_mark
+        self._scrub_miss_mark = self.host_misses
+        c = self.controller
+        if busy or (c is not None and getattr(c, "stall_counter", 0) > 0):
+            return 0
+        victims = [k for k in self._resident if self._pins.get(k, 0) == 0]
+        if not victims:
+            return 0
+        self._scrub_cursor %= len(victims)
+        scrubbed = 0
+        for i in range(min(g.scrub_budget, len(victims))):
+            key = victims[(self._scrub_cursor + i) % len(victims)]
+            self.pin(key)
+            try:
+                ok = bool(self.scrub_fn(key))
+            finally:
+                self.unpin(key)
+            g.n_scrubbed += 1
+            scrubbed += 1
+            if not ok:
+                n = g.record_corrupt(key)
+                self._evict_one(key)     # drop the rotten copy
+                if n > g.refetch_max:
+                    g.quarantine(key)
+                else:
+                    self.pf.prefetch(key, now)   # self-heal: re-promote
+        self._scrub_cursor = (self._scrub_cursor + scrubbed) \
+            % max(1, len(victims))
+        return scrubbed
 
     # --------------------------------------------------------- residency
     def host_resident(self, key: Key) -> bool:
@@ -338,6 +503,11 @@ class HostTierModel:
         # speculative promotion issued one layer ago must count as the hit
         # it is, not as an in-flight miss
         self.advance(now)
+        if self.guard.is_quarantined(key):
+            # the disk record itself is bad: no promotion is attempted,
+            # no hit is counted — the caller degrades (dead sentinel)
+            self.guard.n_quarantine_denials += 1
+            return None
         self.note_use(key)
         if key in self._resident:
             self.host_hits += 1
@@ -353,6 +523,11 @@ class HostTierModel:
         if t_done is None:
             self.n_demand_failures += 1
             return None
+        if self.guard.enabled:
+            t_done = self._verified_delivery(key, t_done)
+            if t_done is None:
+                self.n_demand_failures += 1
+                return None
         self._land(key, demand=True)
         stall = max(0.0, t_done - now)
         self.disk_stall_s += stall
@@ -368,6 +543,8 @@ class HostTierModel:
         window exists for."""
         if not self.prefetch_enabled:
             return False
+        if self.guard.is_quarantined(key):
+            return False
         if key in self._resident or key in self.pf.issued:
             return False
         if self._issue_slots() < 1:
@@ -377,9 +554,26 @@ class HostTierModel:
 
     def advance(self, now: float) -> List[Key]:
         """Land completed promotions up to `now`; returns keys that
-        became host-resident."""
+        became host-resident. With integrity enabled every speculative
+        arrival is verified first: a corrupt copy is discarded and
+        re-requested (bounded), a copy that keeps arriving corrupt is
+        quarantined — corruption never lands."""
         landed = []
+        g = self.guard
         for key in self.pf.advance(now):
+            if g.enabled:
+                if g.is_quarantined(key):
+                    self.pf.forget(key, count_unused=False)
+                    continue
+                if not self._verify(key):
+                    n = g.record_corrupt(key)
+                    self.pf.forget(key, count_unused=False)
+                    if n > g.refetch_max:
+                        g.quarantine(key)
+                    else:
+                        self.pf.prefetch(key, now)   # self-heal re-fetch
+                    continue
+                g.record_clean(key)
             if self._land(key, demand=False):
                 landed.append(key)
         return landed
@@ -489,6 +683,8 @@ class HostTierModel:
                 key = (li, int(e))
                 if key in self._resident or key in self.pf.issued:
                     continue
+                if self.guard.is_quarantined(key):
+                    continue             # permanently dead on disk
                 self.pf.prefetch(key, now)
                 issued += 1
                 n_li += 1
@@ -506,18 +702,20 @@ class HostTierModel:
         return self.pf.n_retries
 
     def snapshot(self) -> Dict[str, float]:
-        return dict(host_hits=self.host_hits,
-                    host_misses=self.host_misses,
-                    disk_stall_s=self.disk_stall_s,
-                    promotions=self.promotions,
-                    evictions=self.evictions,
-                    disk_prefetches=self.pf.n_prefetches,
-                    disk_late_hits=self.disk_late_hits,
-                    n_disk_failures=self.n_disk_failures,
-                    n_disk_retries=self.n_disk_retries,
-                    n_demand_failures=self.n_demand_failures,
-                    dropped_arrivals=self.dropped_arrivals,
-                    host_bytes=self.host_bytes)
+        out = dict(host_hits=self.host_hits,
+                   host_misses=self.host_misses,
+                   disk_stall_s=self.disk_stall_s,
+                   promotions=self.promotions,
+                   evictions=self.evictions,
+                   disk_prefetches=self.pf.n_prefetches,
+                   disk_late_hits=self.disk_late_hits,
+                   n_disk_failures=self.n_disk_failures,
+                   n_disk_retries=self.n_disk_retries,
+                   n_demand_failures=self.n_demand_failures,
+                   dropped_arrivals=self.dropped_arrivals,
+                   host_bytes=self.host_bytes)
+        out.update(self.guard.counters())
+        return out
 
 
 # ------------------------------------------------------------ full store
@@ -535,7 +733,10 @@ class TieredExpertStore:
                  disk_bandwidth: float = 2e9,
                  controller: Optional[Any] = None,
                  disk_horizon_max: int = 64,
-                 prefetch: bool = True):
+                 prefetch: bool = True,
+                 verify: str = "off",
+                 scrub_budget: int = 2,
+                 refetch_max: int = 3):
         self.reader = ExpertShardReader(store_dir)
         layer_ids = self.reader.layers()
         if not layer_ids:
@@ -562,14 +763,80 @@ class TieredExpertStore:
         self.model.on_insert = self._load
         self.model.on_evict = self._drop
         self._host: Dict[Key, Tuple[np.ndarray, ...]] = {}
+        # integrity: verified-but-not-yet-landed copies, and the chaos
+        # source (the injector's disk view) that flips bytes before the
+        # CRC check so detection exercises the REAL verification path
+        self._staged: Dict[Key, Tuple[np.ndarray, ...]] = {}
+        self._chaos: Optional[Any] = None
+        if verify != "off" and not self.reader.has_checksums():
+            verify = "off"               # pre-integrity manifest
+        self.verify = verify
+        if verify != "off":
+            self.model.configure_integrity(
+                verify, scrub_budget=scrub_budget, refetch_max=refetch_max,
+                verify_fn=self._verify_promotion, scrub_fn=self._scrub_host)
 
     # tier events -> actual bytes
     def _load(self, key: Key) -> None:
         if key not in self._host:
-            self._host[key] = self.reader.read_expert(*key)
+            staged = self._staged.pop(key, None)
+            self._host[key] = staged if staged is not None \
+                else self.reader.read_expert(*key)
 
     def _drop(self, key: Key) -> None:
         self._host.pop(key, None)
+        self._staged.pop(key, None)
+
+    # ------------------------------------------------------- integrity
+    @staticmethod
+    def _flip_byte(raw: np.ndarray, key: Key, attempt: int = 0) -> None:
+        """Deterministic single-byte corruption (chaos injection): any
+        flip defeats CRC-32, so the position only needs to be stable."""
+        li, e = key
+        pos = (li * 1315423911 + e * 2654435761 + attempt * 97) % raw.size
+        raw[pos] ^= 0x01
+
+    def _verify_promotion(self, key: Key) -> bool:
+        """Load + checksum a freshly promoted record. The chaos source
+        may flip real bytes first (on-media rot per key, in-transit rot
+        per attempt); the CRC catches every flip. A clean record is
+        decoded and staged so landing never re-reads the disk."""
+        li, e = key
+        want = self.reader.record_crc(li, e)
+        if want is None:
+            return True
+        raw = self.reader.read_record_bytes(li, e)
+        ch = self._chaos
+        if ch is not None:
+            if getattr(ch, "disk_record_corrupt", lambda k: False)(key):
+                self._flip_byte(raw, key)
+            if getattr(ch, "promotion_corrupt", lambda k: False)(key):
+                self._flip_byte(raw, key, attempt=1)
+        if zlib.crc32(raw.tobytes()) != want:
+            self._staged.pop(key, None)
+            return False
+        self._staged[key] = self.reader.decode_record(li, raw)
+        return True
+
+    def _scrub_host(self, key: Key) -> bool:
+        """Re-checksum a host-resident copy in place (background scrub).
+        The chaos source models in-RAM rot by flipping a real byte of
+        the resident array, which the CRC then detects."""
+        li, e = key
+        want = self.reader.record_crc(li, e)
+        ws = self._host.get(key)
+        if want is None or ws is None:
+            return True
+        ch = self._chaos
+        if ch is not None and \
+                getattr(ch, "host_copy_corrupt", lambda k: False)(key):
+            buf = encode_raw(ws[0]).reshape(-1).view(np.uint8)
+            self._flip_byte(buf, key)
+        crc = 0
+        for w in ws:
+            crc = zlib.crc32(encode_raw(np.ascontiguousarray(w)).tobytes(),
+                             crc)
+        return crc == want
 
     # ------------------------------------------------- tier delegation
     def host_resident(self, key: Key) -> bool:
@@ -582,10 +849,22 @@ class TieredExpertStore:
         return self.model.request(key, now)
 
     def advance(self, now: float) -> List[Key]:
-        return self.model.advance(now)
+        landed = self.model.advance(now)
+        # staged copies whose arrival was dropped (tier fully pinned)
+        # were forgotten by the model; release the bytes too
+        if self._staged:
+            self._staged.clear()
+        return landed
 
     def auto_prefetch(self, now: float, current_layer: int) -> int:
         return self.model.auto_prefetch(now, current_layer)
+
+    def scrub_tick(self, now: float) -> int:
+        return self.model.scrub_tick(now)
+
+    @property
+    def guard(self) -> IntegrityGuard:
+        return self.model.guard
 
     def note_predicted(self, keys: Iterable[Key]) -> None:
         self.model.note_predicted(keys)
@@ -606,6 +885,9 @@ class TieredExpertStore:
                    retry_backoff_s: float = 0.0) -> None:
         self.model.set_faults(injector, retry_max=retry_max,
                               retry_backoff_s=retry_backoff_s)
+        # the corrupt scope flips real bytes inside the verify hooks
+        self._chaos = injector.disk_view() \
+            if hasattr(injector, "disk_view") else injector
 
     def snapshot(self) -> Dict[str, float]:
         return self.model.snapshot()

@@ -81,13 +81,28 @@ class FaultPlan:
     disk_jitter: float = 0.0
     disk_bandwidth_factor: float = 1.0
     disk_outage: Tuple[Window, ...] = ()
+    # ---- corrupt scope (the integrity layer, core.integrity). The link
+    # delivers on time but the *bytes* lie. Three injection points:
+    # on-media rot (a per-key property of the record — every re-read is
+    # corrupt, so bounded re-fetch exhausts and the expert is permanently
+    # quarantined), in-transit payload flips (per-attempt — a re-fetch
+    # usually heals), and in-RAM rot of a host-resident copy (drawn per
+    # scrubber visit).
+    corrupt_disk_prob: float = 0.0
+    corrupt_link_prob: float = 0.0
+    corrupt_host_prob: float = 0.0
+
+    @property
+    def corrupt_enabled(self) -> bool:
+        return (self.corrupt_disk_prob > 0.0 or self.corrupt_link_prob > 0.0
+                or self.corrupt_host_prob > 0.0)
 
     @property
     def disk_enabled(self) -> bool:
         return (self.disk_fail_prob > 0.0 or self.disk_stall_prob > 0.0
                 or self.disk_jitter > 0.0
                 or self.disk_bandwidth_factor != 1.0
-                or bool(self.disk_outage))
+                or bool(self.disk_outage) or self.corrupt_enabled)
 
     @property
     def enabled(self) -> bool:
@@ -139,8 +154,28 @@ class FaultPlan:
         fails — serving must degrade (drop tokens), never deadlock."""
         return cls(disk_outage=((start, end),))
 
+    @classmethod
+    def corrupt_disk(cls, seed: int = 0,
+                     corrupt_disk_prob: float = 0.25) -> "FaultPlan":
+        """A fraction of on-disk expert records are rotten: every re-fetch
+        re-reads the same bad bytes, so verification exhausts its bounded
+        retries and the expert is permanently quarantined (degraded
+        resident-only routing) — serving completes, never deadlocks."""
+        return cls(seed=seed, corrupt_disk_prob=corrupt_disk_prob)
+
+    @classmethod
+    def corrupt_flaky(cls, seed: int = 0,
+                      corrupt_link_prob: float = 0.3,
+                      corrupt_host_prob: float = 0.1) -> "FaultPlan":
+        """Transient corruption: promotion payloads flip in transit and
+        host-resident copies rot in RAM — both heal on re-fetch, so the
+        integrity layer detects, requarantines, and keeps serving with
+        zero corrupt bytes reaching an FFN dispatch."""
+        return cls(seed=seed, corrupt_link_prob=corrupt_link_prob,
+                   corrupt_host_prob=corrupt_host_prob)
+
     PRESETS = ("none", "flaky", "brownout", "stall", "outage",
-               "disk_flaky", "disk_dead")
+               "disk_flaky", "disk_dead", "corrupt_disk", "corrupt_flaky")
 
     @classmethod
     def from_arg(cls, s: Optional[str]) -> Optional["FaultPlan"]:
@@ -162,6 +197,10 @@ class FaultPlan:
             return cls.disk_flaky()
         if s == "disk_dead":
             return cls.disk_dead()
+        if s == "corrupt_disk":
+            return cls.corrupt_disk()
+        if s == "corrupt_flaky":
+            return cls.corrupt_flaky()
         if s.lstrip().startswith("{"):
             return cls.from_json(s)
         if os.path.exists(s):
@@ -311,6 +350,33 @@ class FaultInjector:
         return (_in_window(self.plan.disk_outage, t)
                 or self.plan.disk_bandwidth_factor < 0.5)
 
+    # ------------------------------------------------------ corrupt scope
+    # Salts 6/7/8. `disk_record_corrupt` pins the attempt to 0: on-media
+    # rot is a property of the RECORD, not of the read — every re-fetch of
+    # a rotten record re-reads the same bad bytes, which is exactly what
+    # makes bounded re-fetch exhaust into permanent quarantine. The other
+    # two draw per attempt/visit, so a re-fetch usually heals.
+    def disk_record_corrupt(self, key) -> bool:
+        """Is this expert's on-disk record rotten? Pure per key."""
+        p = self.plan.corrupt_disk_prob
+        return p > 0.0 and self._draw(6, key, 0) < p
+
+    def promotion_corrupt(self, key) -> bool:
+        """Did this disk->host promotion's payload flip in transit? One
+        draw per delivery attempt."""
+        p = self.plan.corrupt_link_prob
+        if p <= 0.0:
+            return False
+        return self._draw(7, key, self._next_attempt(7, key)) < p
+
+    def host_copy_corrupt(self, key) -> bool:
+        """Did this host-resident copy rot in RAM? One draw per scrubber
+        visit."""
+        p = self.plan.corrupt_host_prob
+        if p <= 0.0:
+            return False
+        return self._draw(8, key, self._next_attempt(8, key)) < p
+
     def disk_view(self) -> "_DiskFaultView":
         """Injector facade for the disk link: exposes the standard surface
         (`transfer_fails`/`attach_link`/...) backed by the disk-scope
@@ -341,6 +407,15 @@ class _DiskFaultView:
 
     def link_degraded(self, t: float) -> bool:
         return self._inj.disk_link_degraded(t)
+
+    def disk_record_corrupt(self, key) -> bool:
+        return self._inj.disk_record_corrupt(key)
+
+    def promotion_corrupt(self, key) -> bool:
+        return self._inj.promotion_corrupt(key)
+
+    def host_copy_corrupt(self, key) -> bool:
+        return self._inj.host_copy_corrupt(key)
 
     def attach_link(self, link) -> None:
         link.bandwidth_hook = lambda tr, t: self.bandwidth_factor(tr.key, t)

@@ -194,6 +194,12 @@ class ServingReport:
     n_host_hits: int = 0          # demanded experts already host-staged
     n_host_misses: int = 0        # demanded experts promoted from disk
     disk_stall_s: float = 0.0     # exposed disk-link stall
+    # expert integrity (checksummed tiers, core.integrity) — all zero
+    # with verification off or a clean store
+    n_corrupt_detected: int = 0   # verifications that failed
+    n_requarantined: int = 0      # corrupt episodes healed by re-fetch
+    n_scrubbed: int = 0           # background re-verifications run
+    n_quarantined_experts: int = 0  # permanently quarantined (gauge)
 
     def add_request(self, m: RequestMetrics) -> None:
         self.requests.append(m)
@@ -261,6 +267,10 @@ class ServingReport:
             "n_host_hits": self.n_host_hits,
             "n_host_misses": self.n_host_misses,
             "disk_stall_s": self.disk_stall_s,
+            "n_corrupt_detected": self.n_corrupt_detected,
+            "n_requarantined": self.n_requarantined,
+            "n_scrubbed": self.n_scrubbed,
+            "n_quarantined_experts": self.n_quarantined_experts,
         }
         for name, dist in (("ttft", self.ttft), ("tpot", self.tpot),
                            ("queue_delay", self.queue_delay)):

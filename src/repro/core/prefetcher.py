@@ -357,7 +357,9 @@ class Prefetcher:
         transfer, AND any drained-but-unsurfaced completion are dropped
         too: a later demand for the re-evicted key must be a fresh miss,
         and a stale completion must never repopulate ready_at for a
-        non-resident expert."""
+        non-resident expert. The integrity layer (`core.integrity`) leans
+        on exactly this to discard a delivered-but-corrupt promotion so
+        its bounded re-fetch is a genuinely fresh read."""
         if count_unused and (key in self.ready_at or key in self.issued) \
                 and key not in self._demanded:
             self.n_unused_prefetches += 1

@@ -86,11 +86,14 @@ def _serve_engine(args, cfg, specs, rng) -> None:
         budget = (args.host_budget_mb * 1e6
                   if args.host_budget_mb is not None else None)
         store = TieredExpertStore(sdir, host_budget_bytes=budget,
-                                  disk_bandwidth=args.disk_bandwidth)
+                                  disk_bandwidth=args.disk_bandwidth,
+                                  verify=args.verify,
+                                  scrub_budget=args.scrub_budget)
         print(f"tiered store: {store.total_expert_bytes/1e6:.1f}MB experts, "
               f"host budget "
               f"{store.model.host_budget_bytes/1e6:.1f}MB, "
-              f"disk_bw={args.disk_bandwidth:g}B/tick")
+              f"disk_bw={args.disk_bandwidth:g}B/tick, "
+              f"verify={store.verify}")
     sb = SlotBufferEngine(cfg, eng.params, eng.model,
                           n_slots_per_layer=slots, max_seq=max_seq,
                           faults=plan, retry_max=args.retry_max,
@@ -128,6 +131,11 @@ def _serve_engine(args, cfg, specs, rng) -> None:
               f"host_misses={s['n_host_misses']} "
               f"disk_stall={s['disk_stall_s']:.3f} link-units "
               f"({store.snapshot()['promotions']:.0f} promotions)")
+        if store.verify != "off":
+            print(f"  integrity: corrupt_detected={s['n_corrupt_detected']} "
+                  f"requarantined={s['n_requarantined']} "
+                  f"scrubbed={s['n_scrubbed']} "
+                  f"quarantined={s['n_quarantined_experts']}")
 
 
 def main() -> None:
@@ -185,6 +193,16 @@ def main() -> None:
                     help="disk->host promotion link bandwidth (bytes per "
                          "link-clock unit: engine ticks once per MoE "
                          "layer; sim uses modeled seconds)")
+    ap.add_argument("--verify", default="off",
+                    choices=("off", "promote", "scrub"),
+                    help="expert integrity: verify disk->host promotions "
+                         "against the shard manifest's per-record CRCs "
+                         "(promote), plus budgeted background re-"
+                         "verification of host-resident copies (scrub). "
+                         "off = pre-feature behavior (bit-exact)")
+    ap.add_argument("--scrub-budget", type=int, default=2,
+                    help="host-copy re-verifications per idle scrubber "
+                         "tick (--verify scrub)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.requests < 1:
@@ -246,7 +264,9 @@ def main() -> None:
                          fault_plan=FaultPlan.from_arg(args.fault_plan),
                          retry_max=args.retry_max,
                          retry_backoff_s=args.retry_backoff,
-                         deadline_s=args.deadline)
+                         deadline_s=args.deadline,
+                         verify=args.verify,
+                         scrub_budget=args.scrub_budget)
     if args.host_budget_mb is not None:
         scfg.host_budget_frac = min(
             1.0, args.host_budget_mb * 1e6 / (sim.expert_bytes * L * M))
@@ -284,6 +304,12 @@ def main() -> None:
             print(f"  {'':14s} tier: host_hits={s['n_host_hits']} "
                   f"host_misses={s['n_host_misses']} "
                   f"disk_stall={s['disk_stall_s']*1e3:.3f}ms")
+            if scfg.verify != "off":
+                print(f"  {'':14s} integrity: "
+                      f"corrupt_detected={s['n_corrupt_detected']} "
+                      f"requarantined={s['n_requarantined']} "
+                      f"scrubbed={s['n_scrubbed']} "
+                      f"quarantined={s['n_quarantined_experts']}")
 
 
 if __name__ == "__main__":

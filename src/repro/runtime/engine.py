@@ -1003,14 +1003,26 @@ class SlotBufferEngine:
     def _advance_clock(self) -> None:
         """One virtual link-clock tick per MoE-layer dispatch: the device
         prefetcher lands arrivals; with a tiered store the disk link lands
-        promotions and the popularity-driven S_disk prefetcher issues the
-        next disk window."""
+        promotions, the popularity-driven S_disk prefetcher issues the
+        next disk window, and the integrity scrubber (when configured)
+        spends its idle-paced budget re-verifying host-resident copies."""
         self._clock += 1.0
         self.prefetcher.advance(self._clock)
         if self.tiers is not None:
             self.tiers.advance(self._clock)
             n_moe = max(len(self.moe_layer_ids), 1)
             self.tiers.auto_prefetch(self._clock, int(self._clock) % n_moe)
+            if hasattr(self.tiers, "scrub_tick"):
+                self.tiers.scrub_tick(self._clock)
+
+    def integrity_counters(self) -> Dict[str, float]:
+        """The tier's integrity-guard health counters (zeros without a
+        tiered store) — `ServingEngine` mirrors these into the
+        `ServingReport` exactly like the link/tier counters."""
+        if self.tiers is None:
+            return dict(n_corrupt_detected=0, n_requarantined=0,
+                        n_scrubbed=0, n_quarantined_experts=0)
+        return self.tiers.model.guard.counters()
 
     # -- residency ----------------------------------------------------------
     def ensure_resident(self, li: int, experts, *,

@@ -305,6 +305,7 @@ class ServingEngine:
         host_hits0 = eng.stats.host_hits
         host_misses0 = eng.stats.host_misses
         disk_stall0 = eng.stats.disk_stall_s
+        integ0 = eng.integrity_counters()
         self._t0 = time.perf_counter()
         it = 0
 
@@ -419,4 +420,12 @@ class ServingEngine:
         report.n_host_hits = eng.stats.host_hits - host_hits0
         report.n_host_misses = eng.stats.host_misses - host_misses0
         report.disk_stall_s = eng.stats.disk_stall_s - disk_stall0
+        integ = eng.integrity_counters()
+        report.n_corrupt_detected = \
+            int(integ["n_corrupt_detected"] - integ0["n_corrupt_detected"])
+        report.n_requarantined = \
+            int(integ["n_requarantined"] - integ0["n_requarantined"])
+        report.n_scrubbed = int(integ["n_scrubbed"] - integ0["n_scrubbed"])
+        # quarantine is permanent: report the gauge, not a diff
+        report.n_quarantined_experts = int(integ["n_quarantined_experts"])
         return report

@@ -235,6 +235,9 @@ class SimCore:
             # issued at layer finish it would land at the very instant the
             # next layer demands it, i.e. always late
             self.tier.auto_prefetch(now, li)
+            # budgeted integrity scrub rides the same layer boundary the
+            # engine's _advance_clock uses (no-op unless configured)
+            self.tier.scrub_tick(now)
 
         # schedule layer compute
         if self.policy.cache_aware and missing:

@@ -144,6 +144,14 @@ class ServingConfig:
     disk_bandwidth: float = 1e8
     disk_prefetch: bool = True
     disk_horizon_max: int = 64
+    # expert integrity (core.integrity): `verify` enables promotion
+    # verification ("promote") plus the budgeted background scrubber
+    # ("scrub"); the modeled outcomes are drawn from the fault plan's
+    # corrupt scope through the same (seed, salt, key, attempt) scheme
+    # the engine's byte-level chaos uses, so both backends agree.
+    verify: str = "off"
+    scrub_budget: int = 2
+    refetch_max: int = 3
 
 
 def _token_table(assign: np.ndarray) -> np.ndarray:
@@ -229,6 +237,20 @@ def simulate_serving(workload: ServingWorkload, spec: SimSpec,
         if core.tier is not None:
             core.tier.set_faults(injector, cfg.retry_max,
                                  cfg.retry_backoff_s)
+    if core.tier is not None and cfg.verify != "off":
+        # injector-drawn verification outcomes: the same pure draws the
+        # engine's byte-flipping chaos consumes before its CRC check
+        dv = injector.disk_view() if injector is not None else None
+        if dv is not None:
+            verify_fn = lambda key: not (dv.disk_record_corrupt(key)  # noqa: E731,E501
+                                         or dv.promotion_corrupt(key))
+            scrub_fn = lambda key: not dv.host_copy_corrupt(key)  # noqa: E731,E501
+        else:
+            verify_fn = scrub_fn = lambda key: True  # noqa: E731
+        core.tier.configure_integrity(
+            cfg.verify, scrub_budget=cfg.scrub_budget,
+            refetch_max=cfg.refetch_max,
+            verify_fn=verify_fn, scrub_fn=scrub_fn)
     straggler = StragglerPolicy(1, threshold=cfg.brownout_threshold,
                                 recovery=cfg.brownout_recovery)
     brown = cfg.brownout_admission
@@ -423,4 +445,9 @@ def simulate_serving(workload: ServingWorkload, spec: SimSpec,
         report.n_host_hits = core.tier.host_hits
         report.n_host_misses = core.tier.host_misses
         report.disk_stall_s = core.tier.disk_stall_s
+        g = core.tier.guard
+        report.n_corrupt_detected = g.n_corrupt_detected
+        report.n_requarantined = g.n_requarantined
+        report.n_scrubbed = g.n_scrubbed
+        report.n_quarantined_experts = g.n_quarantined_experts
     return report

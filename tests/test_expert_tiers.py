@@ -117,6 +117,51 @@ def test_truncated_and_corrupt_shards_raise_shard_error(tmp_path):
         ExpertShardReader(t4)
 
 
+def test_truncation_after_open_fails_at_materialization(tmp_path):
+    # The reader maps shard files lazily, so a file can shrink between
+    # construction and first read (partial re-export, disk fault). A read
+    # that lands inside the truncated tail must raise ShardError, not
+    # silently return short/garbage bytes.
+    st = _store(np.random.default_rng(4))
+    sdir = export_expert_shards(st, str(tmp_path / "sh"))
+    rd = ExpertShardReader(sdir)          # no reads yet: mmap still lazy
+    binf = os.path.join(sdir, "layer_00001.bin")
+    rec = rd.record_nbytes(1)
+    # cut inside record k=2 (a mid-file record, not just the last one)
+    with open(binf, "r+b") as f:
+        f.truncate(2 * rec + rec // 2)
+    with pytest.raises(ShardError, match="truncated"):
+        rd.read_expert(1, 2)
+    rd.read_expert(1, 0)                  # records before the cut still fine
+    with pytest.raises(ShardError, match="truncated"):
+        rd.read_expert(1, 3)
+
+
+def test_manifest_checksums_stamped_and_optional(tmp_path):
+    import zlib
+    st = _store(np.random.default_rng(5))
+    sdir = export_expert_shards(st, str(tmp_path / "sh"))
+    rd = ExpertShardReader(sdir)
+    assert rd.has_checksums()
+    for li in rd.layers():
+        for e in range(rd.num_experts(li)):
+            want = rd.record_crc(li, e)
+            got = zlib.crc32(rd.read_record_bytes(li, e).tobytes())
+            assert got == want
+    # pre-checksum manifests (no crc32 field) still load; verification
+    # silently downgrades to off rather than refusing the store
+    man_path = os.path.join(sdir, SHARD_MANIFEST)
+    man = json.load(open(man_path))
+    for rec in man["layers"]:
+        del rec["crc32"]
+    json.dump(man, open(man_path, "w"))
+    rd2 = ExpertShardReader(sdir)
+    assert not rd2.has_checksums()
+    assert rd2.record_crc(0, 0) is None
+    store = TieredExpertStore(sdir, verify="promote")
+    assert store.verify == "off"
+
+
 # --------------------------------------------------------------------------
 # host staging tier: budget, LRU, pins
 # --------------------------------------------------------------------------

@@ -1,0 +1,129 @@
+"""checkpoint.ingest: safetensors -> expert-shard adapter.
+
+The name-parsing half is pure and always runs; the file round-trip
+half needs the optional `safetensors` package (importorskip)."""
+import numpy as np
+import pytest
+
+from repro.checkpoint.ingest import (DEFAULT_PATTERN, ingest_safetensors,
+                                     parse_expert_key)
+from repro.core.expert_tiers import ExpertShardReader
+
+import re
+
+
+# ---------------------------------------------------------------- parser
+
+def test_parse_qwen_style_names():
+    assert parse_expert_key(
+        "model.layers.3.mlp.experts.7.gate_proj.weight") == (3, 7, 0)
+    assert parse_expert_key(
+        "model.layers.3.mlp.experts.7.up_proj.weight") == (3, 7, 1)
+    assert parse_expert_key(
+        "model.layers.12.mlp.experts.0.down_proj.weight") == (12, 0, 2)
+
+
+def test_parse_mixtral_style_names():
+    assert parse_expert_key(
+        "model.layers.0.block_sparse_moe.experts.5.w1.weight") == (0, 5, 0)
+    assert parse_expert_key(
+        "model.layers.0.block_sparse_moe.experts.5.w3.weight") == (0, 5, 1)
+    assert parse_expert_key(
+        "model.layers.0.block_sparse_moe.experts.5.w2.weight") == (0, 5, 2)
+
+
+def test_parse_rejects_non_expert_tensors():
+    for name in ("model.layers.3.mlp.experts.7.gate_proj.bias",
+                 "model.layers.3.self_attn.q_proj.weight",
+                 "model.layers.3.mlp.gate.weight",     # router, not expert
+                 "model.embed_tokens.weight"):
+        assert parse_expert_key(name) is None
+
+
+def test_parse_custom_pattern():
+    pat = re.compile(r"blk\.(?P<layer>\d+)\.exp\.(?P<expert>\d+)\."
+                     r"(?P<proj>w1|w2|w3)$")
+    assert parse_expert_key("blk.2.exp.9.w3", pat) == (2, 9, 1)
+    assert parse_expert_key("blk.2.exp.9.w3") is None  # default pattern
+
+
+# ------------------------------------------------------------ round trip
+
+def _hf_checkpoint(rng, layers, E, d, f):
+    """Synthetic HF-style tensor dict: gate/up stored (f, d), down (d, f)."""
+    tensors = {}
+    for li in layers:
+        for e in range(E):
+            base = f"model.layers.{li}.mlp.experts.{e}"
+            tensors[f"{base}.gate_proj.weight"] = rng.standard_normal(
+                (f, d)).astype(np.float32)
+            tensors[f"{base}.up_proj.weight"] = rng.standard_normal(
+                (f, d)).astype(np.float16)
+            tensors[f"{base}.down_proj.weight"] = rng.standard_normal(
+                (d, f)).astype(np.float32)
+    # a non-expert tensor the scanner must ignore
+    tensors["model.embed_tokens.weight"] = np.ones((4, d), np.float32)
+    return tensors
+
+
+def test_safetensors_round_trip_bitwise(tmp_path):
+    st = pytest.importorskip("safetensors.numpy")
+    rng = np.random.default_rng(0)
+    ckpt_layers, E, d, f = [1, 5], 3, 4, 6   # non-dense layer ids
+    tensors = _hf_checkpoint(rng, ckpt_layers, E, d, f)
+    # split across two files to exercise the multi-file index
+    names = sorted(tensors)
+    half = len(names) // 2
+    p0, p1 = str(tmp_path / "a.safetensors"), str(tmp_path / "b.safetensors")
+    st.save_file({k: tensors[k] for k in names[:half]}, p0)
+    st.save_file({k: tensors[k] for k in names[half:]}, p1)
+
+    out = ingest_safetensors([p0, p1], str(tmp_path / "shards"))
+    r = ExpertShardReader(out)
+    assert r.layers() == list(range(len(ckpt_layers)))
+    assert all(r.num_experts(li) == E for li in r.layers())
+    assert r.has_checksums()
+
+    for dense, li in enumerate(ckpt_layers):   # densified by sort order
+        for e in range(E):
+            wg, wu, wd = r.read_expert(dense, e)
+            base = f"model.layers.{li}.mlp.experts.{e}"
+            np.testing.assert_array_equal(
+                wg, tensors[f"{base}.gate_proj.weight"].T)
+            np.testing.assert_array_equal(
+                wu, tensors[f"{base}.up_proj.weight"].T)
+            np.testing.assert_array_equal(
+                wd, tensors[f"{base}.down_proj.weight"].T)
+    assert wu.dtype == np.float16   # mixed dtypes survive
+
+
+def test_no_transpose_keeps_raw_layout(tmp_path):
+    st = pytest.importorskip("safetensors.numpy")
+    rng = np.random.default_rng(1)
+    tensors = _hf_checkpoint(rng, [0], 2, 3, 5)
+    p = str(tmp_path / "c.safetensors")
+    st.save_file(tensors, p)
+    out = ingest_safetensors(p, str(tmp_path / "shards"), transpose=False)
+    wg, _, _ = ExpertShardReader(out).read_expert(0, 1)
+    np.testing.assert_array_equal(
+        wg, tensors["model.layers.0.mlp.experts.1.gate_proj.weight"])
+
+
+def test_missing_projection_rejected(tmp_path):
+    st = pytest.importorskip("safetensors.numpy")
+    rng = np.random.default_rng(2)
+    tensors = _hf_checkpoint(rng, [0], 2, 3, 5)
+    del tensors["model.layers.0.mlp.experts.1.up_proj.weight"]
+    p = str(tmp_path / "d.safetensors")
+    st.save_file(tensors, p)
+    with pytest.raises(ValueError, match="missing its w_up"):
+        ingest_safetensors(p, str(tmp_path / "shards"))
+
+
+def test_no_expert_tensors_rejected(tmp_path):
+    st = pytest.importorskip("safetensors.numpy")
+    p = str(tmp_path / "e.safetensors")
+    st.save_file({"model.embed_tokens.weight": np.ones((2, 2), np.float32)},
+                 p)
+    with pytest.raises(ValueError, match="no expert tensors"):
+        ingest_safetensors(p, str(tmp_path / "shards"))

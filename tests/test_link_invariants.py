@@ -407,3 +407,134 @@ def test_two_link_dead_disk_degrades_never_deadlocks():
     # time passes) but no promotion ever lands
     assert m.promotions == 0
     assert m.n_disk_failures >= 10
+
+
+# --------------------------------------- corruption interleavings (fuzz)
+
+def _corrupt_tier(seed, rng, *, mode="scrub", refetch_max=2):
+    """Tier wired the way `simulator.serving` wires integrity: the verify
+    hooks draw corruption outcomes from the shared injector's disk view."""
+    plan = FaultPlan(seed=seed,
+                     corrupt_disk_prob=float(rng.uniform(0.0, 0.15)),
+                     corrupt_link_prob=float(rng.uniform(0.1, 0.5)),
+                     corrupt_host_prob=float(rng.uniform(0.0, 0.3)))
+    m = _tier(int(rng.integers(4, 10)))
+    inj = FaultInjector(plan)
+    m.set_faults(inj, retry_max=1)
+    dv = inj.disk_view()
+    m.configure_integrity(
+        mode, scrub_budget=2, refetch_max=refetch_max,
+        verify_fn=lambda key: not (dv.disk_record_corrupt(key)
+                                   or dv.promotion_corrupt(key)),
+        scrub_fn=lambda key: not dv.host_copy_corrupt(key))
+    return m
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_corrupt_promotions_settle_exactly_once(seed):
+    """Every corruption episode settles as exactly one of requarantined
+    (healed) or quarantined — never both, never lost — across random
+    demand/request/advance/scrub interleavings."""
+    rng = np.random.default_rng(11000 + seed)
+    m = _corrupt_tier(seed, rng)
+    g = m.guard
+    now = 0.0
+    for _ in range(int(rng.integers(30, 80))):
+        op = rng.choice(["request", "demand", "advance", "scrub"])
+        key = (int(rng.integers(2)), int(rng.integers(16)))
+        if op == "request":
+            m.request(key, now)
+        elif op == "demand":
+            r = m.demand(key, now)
+            if r is not None:
+                assert m.host_resident(key)
+                assert not g.is_quarantined(key)
+        elif op == "scrub":
+            m.scrub_tick(now)
+        else:
+            now += float(rng.uniform(0.0, 0.1))
+            m.advance(now)
+        # invariant holds mid-flight too: open episodes are in `healing`
+        assert g.n_episodes == (g.n_requarantined + len(g.quarantined)
+                                + len(g.healing))
+    # drain: each advance may re-issue a self-heal prefetch for a still-
+    # corrupt arrival, but refetch_max bounds every episode
+    for i in range(m.guard.refetch_max + 3):
+        now += 10.0
+        m.advance(now)
+    assert not g.healing, "corruption episode never settled"
+    assert g.n_episodes == g.n_requarantined + len(g.quarantined)
+    if g.n_corrupt_detected:
+        assert g.n_episodes > 0
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_quarantined_experts_never_resident_and_never_hit(seed):
+    """A quarantined expert can never be host-resident, never satisfies a
+    demand, and never bumps the host-hit counter."""
+    rng = np.random.default_rng(12000 + seed)
+    m = _corrupt_tier(seed, rng, refetch_max=0)   # quarantine on 1st strike
+    now = 0.0
+    for i in range(60):
+        key = (int(rng.integers(2)), int(rng.integers(16)))
+        m.demand(key, now)
+        now += float(rng.uniform(0.0, 0.05))
+        m.advance(now)
+        m.scrub_tick(now)
+        assert not (m.guard.quarantined & set(m._resident))
+    m.advance(now + 1e9)
+    g = m.guard
+    if not g.quarantined:
+        pytest.skip("no quarantines drawn for this seed")
+    hits0, denials0 = m.host_hits, g.n_quarantine_denials
+    for key in sorted(g.quarantined):
+        assert m.demand(key, now + 1e9) is None
+        assert not m.request(key, now + 1e9)
+        assert not m.host_resident(key)
+    assert m.host_hits == hits0
+    assert g.n_quarantine_denials == denials0 + len(g.quarantined)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_scrubber_pins_never_leak(seed):
+    """The scrubber pins each victim only for the duration of its own
+    verification — after any interleaving, no scrub pin remains and user
+    pins are untouched."""
+    rng = np.random.default_rng(13000 + seed)
+    m = _corrupt_tier(seed, rng)
+    user_pin = (0, 3)
+    assert m.demand(user_pin, 0.0) is not None or True
+    if m.host_resident(user_pin):
+        m.pin(user_pin)
+    now = 1.0
+    for i in range(40):
+        key = (int(rng.integers(2)), int(rng.integers(16)))
+        m.demand(key, now)
+        m.scrub_tick(now)
+        now += 0.05
+        m.advance(now)
+        leaked = {k: c for k, c in m._pins.items()
+                  if c and k != user_pin}
+        assert not leaked, f"scrub pin leaked: {leaked}"
+    if m.pinned(user_pin):
+        m.unpin(user_pin)
+    assert all(c == 0 for c in m._pins.values())
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_scrub_requarantine_keeps_budget_and_accounting(seed):
+    """Host-rot detected by the scrubber evicts the copy immediately (the
+    corrupt bytes can't be gathered) and the budget/accounting invariants
+    survive arbitrary rot + re-promotion churn."""
+    rng = np.random.default_rng(14000 + seed)
+    m = _corrupt_tier(seed, rng)
+    now = 0.0
+    for i in range(50):
+        m.demand((i % 2, int(rng.integers(16))), now)
+        m.scrub_tick(now)
+        now += 0.05
+        m.advance(now)
+        assert m.host_bytes == len(m._resident) * m.expert_nbytes
+        assert m.host_bytes <= m.host_budget_bytes + 1e-9
+    if m.guard.n_scrubbed == 0:
+        pytest.skip("scrubber never ran for this seed")

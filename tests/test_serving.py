@@ -292,3 +292,31 @@ def test_synthetic_trace_shapes_and_expert_range():
             assert (a >= 0).all() and (a < 8).all()
     assert steps[0].embeddings is not None
     assert steps[1].embeddings is None
+
+
+# ------------------------------------------- cross-backend report parity
+def test_serving_report_key_parity_across_backends():
+    """Both backends must emit the same health vocabulary: the engine and
+    the simulator construct the one `core.metrics.ServingReport`, and a
+    live run's summary() exposes exactly the dataclass's key set — so a
+    field added to one backend's report can't silently miss the other."""
+    from repro.core.metrics import ServingReport
+    import repro.runtime.serving as engine_backend
+    import repro.simulator.serving as sim_backend
+    assert engine_backend.ServingReport is ServingReport
+    assert sim_backend.ServingReport is ServingReport
+
+    base_keys = set(ServingReport().summary())
+    r0 = ServingRequest(prompt_len=16, max_new_tokens=2,
+                        steps=micro_steps(2, [[0], [1]]),
+                        arrival_s=0.0, request_id=0)
+    spec = SimSpec(expert_bytes=1e3, layer_time_s=MS, capacity_experts=16)
+    rep = simulate_serving(micro_workload([r0]), spec, FAST_HW,
+                           plain_policy(),
+                           cfg=ServingConfig(max_batch=1, prefill_chunk=16))
+    assert set(rep.summary()) == base_keys
+    # the integrity health fields ride along on every report
+    for k in ("n_corrupt_detected", "n_requarantined", "n_scrubbed",
+              "n_quarantined_experts"):
+        assert k in base_keys
+        assert rep.summary()[k] == 0     # no tier, no verification -> zeros
